@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus context lines prefixed
+with '#').  Mapping to the paper:
+
+  overhead_*   -> Table 2 columns O/H (tracer overhead on a real training
+                  loop), CR (critical ratio), M (profiler memory), PPT
+                  (post-processing time)
+  cmetric_*    -> the "extremely low overhead" claim: per-event probe cost
+                  and offline fold throughput for every backend
+  balance_*    -> Figures 4/5: per-worker CMetric imbalance detection and
+                  the effect of rebalancing (Ferret thread-reallocation
+                  experiment, transplanted to pipeline stages)
+  detect_*     -> §5.2: injected-bottleneck identification accuracy
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_balance, bench_cmetric, bench_detect,
+                            bench_overhead)
+    print("# GAPP benchmark harness — paper-table analogues")
+    print("name,us_per_call,derived")
+    for mod in (bench_cmetric, bench_overhead, bench_balance, bench_detect):
+        t0 = time.time()
+        for row in mod.run():
+            name, us, derived = row
+            print(f"{name},{us:.3f},{derived}", flush=True)
+        print(f"# {mod.__name__} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

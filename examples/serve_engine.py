@@ -1,0 +1,57 @@
+"""Batched serving with the decode engine + GAPP request profiling.
+
+Each batch slot is a logical worker.  A mixed workload (many short
+requests, a few very long ones) exhibits the classic continuous-batching
+pathology: near the tail, most slots sit idle while the long requests hold
+the batch — reduced parallelism, high CMetric for the long-request spans.
+
+Run:  PYTHONPATH=src python examples/serve_engine.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import Gapp, render_text
+from repro.models import init_lm
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    cfg = configs.get_tiny("deepseek-7b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    gapp = Gapp(n_min=None, dt=0.002)
+    engine = Engine(cfg, params, batch_slots=8, cache_len=128, gapp=gapp)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(16):
+        long = i in (3, 7)
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=4),
+            max_new=192 if long else 12))
+
+    # warm up the compiled decode step so compile time doesn't pollute spans
+    engine._step(params, engine.tokens, engine.pos, engine.state)
+
+    t0 = time.perf_counter()
+    with gapp.running():
+        finished = engine.run(reqs)
+    wall = time.perf_counter() - t0
+
+    rep = gapp.report()
+    print(render_text(rep, max_paths=4))
+    toks = sum(len(r.out) for r in finished)
+    print(f"served {len(finished)} requests, {toks} tokens in {wall:.2f}s "
+          f"({toks / wall:.0f} tok/s)")
+    top = rep.path_str(rep.paths[0]) if rep.paths else "?"
+    print(f"top critical path: {top}")
+    assert "req3" in top or "req7" in top, top
+    print("=> the long requests (3 and 7) serialized the batch tail — "
+          "exactly what the CMetric ranks first. A scheduler fix "
+          "(length-aware admission) is the 'fix the bottleneck' step.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: GAPP (ICPE 2020) criticality profiler + multi-pod JAX framework."""

@@ -1,0 +1,2 @@
+"""Checkpointing: sharded, atomic, elastic."""
+from repro.ckpt import checkpoint  # noqa: F401

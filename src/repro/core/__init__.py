@@ -1,0 +1,29 @@
+"""GAPP core: criticality-metric serialization-bottleneck profiler."""
+from repro.core.events import (ACTIVATE, DEACTIVATE, EventLog, EventRing,
+                               synthetic_log)
+from repro.core.cmetric import (CMetricResult, compute, compute_numpy,
+                                compute_streaming, compute_vectorized)
+from repro.core.tracer import (CriticalSlice, StackRegistry, TagRegistry,
+                               Tracer)
+from repro.core.sampler import SampleBuffer, SamplingProbe, simulate_samples
+from repro.core.detector import (BottleneckReport, PathProfile, detect,
+                                 detect_offline)
+from repro.core.report import imbalance_stats, render_text, to_json
+from repro.core.profiler import Gapp, profile_log
+
+__all__ = [
+    "ACTIVATE", "DEACTIVATE", "EventLog", "EventRing", "synthetic_log",
+    "CMetricResult", "compute", "compute_numpy", "compute_streaming",
+    "compute_vectorized", "CriticalSlice", "StackRegistry", "TagRegistry",
+    "Tracer", "SampleBuffer", "SamplingProbe", "simulate_samples",
+    "BottleneckReport", "PathProfile", "detect", "detect_offline",
+    "imbalance_stats", "render_text", "to_json", "Gapp", "profile_log",
+]
+from repro.core.wakers import (classify_report, classify_tag,  # noqa: E402
+                               critical_wakers, waker_edges)
+
+__all__ += ["classify_report", "classify_tag", "critical_wakers",
+            "waker_edges"]
+from repro.core.timeline import dump_chrome_trace, to_chrome_trace  # noqa: E402,F401
+
+__all__ += ["dump_chrome_trace", "to_chrome_trace"]

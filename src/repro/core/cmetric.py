@@ -1,0 +1,281 @@
+"""Criticality Metric (CMetric) — the paper's §2/§4.1 algorithm.
+
+Time is split into *switching intervals* ``T_i`` delimited by any worker
+state-change event; every worker active during interval ``i`` earns
+``T_i / n_i`` where ``n_i`` is the number of active workers.  A worker's
+timeslice CMetric is recovered in O(1) per event with a running prefix
+``global_cm`` and a per-worker snapshot ``local_cm`` (the paper's eBPF-map
+trick)::
+
+    global_cm        += (t - t_switch) / thread_count       # every event
+    cm_hash[w]       += global_cm - local_cm[w]             # on switch-out
+    local_cm[w]       = global_cm                           # on switch-in
+
+Three implementations, equivalent up to float tolerance:
+
+* :func:`compute_numpy`    — float64 oracle (reference for everything else).
+* :func:`compute_streaming`— paper-faithful event-at-a-time ``lax.scan``
+  maintaining exactly the eBPF-map state of Table 1.
+* :func:`compute_vectorized` — beyond-paper data-parallel formulation
+  (cumsum + stable-sort pairing + segment-sum), which is what the Pallas
+  fold kernel accelerates.  O(E log E) work but fully parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import ACTIVATE, DEACTIVATE, EventLog
+
+
+@dataclasses.dataclass
+class CMetricResult:
+    """Per-worker totals plus per-timeslice records.
+
+    Slice arrays are aligned and length-S (one entry per completed timeslice,
+    i.e. per DEACTIVATE event).  ``threads_av`` is the harmonic weighted
+    average parallelism ``(end-start)/slice_cm`` (== n when parallelism is
+    constant over the slice); the stack-trace trigger is
+    ``threads_av < n_min`` (paper §4.2).
+    """
+
+    per_worker: np.ndarray        # float64[W] cumulative CMetric (cm_hash)
+    slice_worker: np.ndarray      # int32[S]
+    slice_start: np.ndarray       # float64[S] seconds (rebased)
+    slice_end: np.ndarray         # float64[S]
+    slice_cm: np.ndarray          # float64[S]
+    slice_threads_av: np.ndarray  # float64[S]
+    slice_stack: np.ndarray       # int32[S] interned call-path id (or -1)
+    idle_time: float              # total time with zero active workers
+    total_time: float             # t_last - t_first
+
+    @property
+    def num_slices(self) -> int:
+        return int(self.slice_cm.shape[0])
+
+    def critical_mask(self, n_min: float) -> np.ndarray:
+        return self.slice_threads_av < n_min
+
+
+def _empty_result(num_workers: int) -> CMetricResult:
+    z = np.zeros((0,))
+    return CMetricResult(np.zeros(num_workers), z.astype(np.int32), z, z, z, z,
+                         z.astype(np.int32), 0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle
+# ---------------------------------------------------------------------------
+
+def compute_numpy(log: EventLog) -> CMetricResult:
+    """float64 reference implementation (event-at-a-time, like the kernel probe)."""
+    e = len(log)
+    if e == 0:
+        return _empty_result(log.num_workers)
+    t = log.slice_seconds()
+    w = log.workers
+    d = log.deltas
+    gcm = 0.0
+    idle = 0.0
+    count = 0
+    local = np.zeros(log.num_workers)
+    start = np.zeros(log.num_workers)
+    cm = np.zeros(log.num_workers)
+    sw, ss, se, sc, sa, sk = [], [], [], [], [], []
+    t_prev = t[0]
+    for i in range(e):
+        dt = t[i] - t_prev
+        if count > 0:
+            gcm += dt / count
+        else:
+            idle += dt
+        t_prev = t[i]
+        wi = int(w[i])
+        if d[i] == ACTIVATE:
+            local[wi] = gcm
+            start[wi] = t[i]
+            count += 1
+        else:
+            slice_cm = gcm - local[wi]
+            cm[wi] += slice_cm
+            dur = t[i] - start[wi]
+            sw.append(wi)
+            ss.append(start[wi])
+            se.append(t[i])
+            sc.append(slice_cm)
+            sa.append(dur / slice_cm if slice_cm > 0 else float(max(count, 1)))
+            sk.append(int(log.stacks[i]))
+            count -= 1
+    return CMetricResult(
+        per_worker=cm,
+        slice_worker=np.asarray(sw, np.int32),
+        slice_start=np.asarray(ss),
+        slice_end=np.asarray(se),
+        slice_cm=np.asarray(sc),
+        slice_threads_av=np.asarray(sa),
+        slice_stack=np.asarray(sk, np.int32),
+        idle_time=float(idle),
+        total_time=float(t[-1] - t[0]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# paper-faithful streaming scan (jax.lax.scan over events)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_workers",))
+def _streaming_scan(times_s, workers, deltas, num_workers: int):
+    """One scan step == one execution of the sched_switch probe function."""
+
+    def step(carry, ev):
+        gcm, idle, count, t_prev, local, start, cm = carry
+        t, wi, d = ev
+        dt = t - t_prev
+        gcm = gcm + jnp.where(count > 0, dt / jnp.maximum(count, 1), 0.0)
+        idle = idle + jnp.where(count > 0, 0.0, dt)
+        is_in = d > 0
+        # switch-in: snapshot local_cm; switch-out: emit timeslice record
+        slice_cm = gcm - local[wi]
+        dur = t - start[wi]
+        local = jnp.where(is_in, local.at[wi].set(gcm), local)
+        start = jnp.where(is_in, start.at[wi].set(t), start)
+        cm = jnp.where(is_in, cm, cm.at[wi].add(slice_cm))
+        count = count + jnp.where(is_in, 1, -1)
+        threads_av = jnp.where(slice_cm > 0, dur / jnp.maximum(slice_cm, 1e-30),
+                               jnp.maximum(count + 1, 1).astype(jnp.float32))
+        out = (~is_in, wi, start[wi] * is_in + (t - dur) * (~is_in), t,
+               slice_cm, threads_av)
+        return (gcm, idle, count, t, local, start, cm), out
+
+    zero = jnp.zeros((num_workers,), jnp.float32)
+    carry0 = (jnp.float32(0), jnp.float32(0), jnp.int32(0), times_s[0],
+              zero, zero, zero)
+    carry, outs = jax.lax.scan(step, carry0, (times_s, workers, deltas))
+    gcm, idle, _, _, _, _, cm = carry
+    return cm, idle, outs
+
+
+def compute_streaming(log: EventLog) -> CMetricResult:
+    """Paper-faithful streaming CMetric via ``lax.scan`` (float32 on device)."""
+    e = len(log)
+    if e == 0:
+        return _empty_result(log.num_workers)
+    t = jnp.asarray(log.slice_seconds(), jnp.float32)
+    cm, idle, outs = _streaming_scan(t, jnp.asarray(log.workers),
+                                     jnp.asarray(log.deltas, jnp.int32),
+                                     log.num_workers)
+    is_out, wi, s_start, s_end, s_cm, s_av = jax.tree.map(np.asarray, outs)
+    m = np.asarray(is_out)
+    # slice start from the scan is reconstructed as end - dur for out events
+    return CMetricResult(
+        per_worker=np.asarray(cm, np.float64),
+        slice_worker=np.asarray(wi[m], np.int32),
+        slice_start=np.asarray(s_start[m], np.float64),
+        slice_end=np.asarray(s_end[m], np.float64),
+        slice_cm=np.asarray(s_cm[m], np.float64),
+        slice_threads_av=np.asarray(s_av[m], np.float64),
+        slice_stack=log.stacks[m],
+        idle_time=float(idle),
+        total_time=float(np.asarray(t)[-1] - np.asarray(t)[0]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# vectorised (beyond-paper) formulation
+# ---------------------------------------------------------------------------
+
+def _fold_interval_terms(times_s, deltas):
+    """Interval lengths, active counts and the global_cm prefix.
+
+    Returns (n, contrib, gcm) where ``n[i]``/``contrib[i]`` describe interval
+    ``[t_i, t_{i+1})`` (length E-1) and ``gcm[e]`` is the value of global_cm
+    when event ``e`` fires (length E).  This is the part the Pallas
+    ``cmetric_fold`` kernel implements on-device.
+    """
+    dt = times_s[1:] - times_s[:-1]
+    n = jnp.cumsum(deltas)[:-1]                      # active during interval i
+    contrib = jnp.where(n > 0, dt / jnp.maximum(n, 1), 0.0)
+    gcm = jnp.concatenate([jnp.zeros((1,), contrib.dtype), jnp.cumsum(contrib)])
+    idle = jnp.sum(jnp.where(n > 0, 0.0, dt))
+    return n, contrib, gcm, idle
+
+
+@functools.partial(jax.jit, static_argnames=("num_workers",))
+def _pair_and_aggregate(times_s, workers, deltas, gcm, idle,
+                        num_workers: int):
+    """Pairing + aggregation stage shared by the vectorised and Pallas
+    backends: ``gcm`` is the global_cm prefix (one entry per event)."""
+    e = times_s.shape[0]
+    # Stable grouping by worker: within a group events alternate IN/OUT, so
+    # consecutive (even, odd) positions form a timeslice.
+    perm = jnp.argsort(workers, stable=True)
+    ws = workers[perm]
+    idx = jnp.arange(e)
+    boundary = jnp.concatenate([jnp.ones((1,), bool), ws[1:] != ws[:-1]])
+    group_first = jax.lax.cummax(jnp.where(boundary, idx, 0))
+    pos = idx - group_first
+    is_out_pos = pos % 2 == 1
+    prev_global = perm[jnp.maximum(idx - 1, 0)]      # matching ACTIVATE event
+    out_global = perm
+    slice_cm = gcm[out_global] - gcm[prev_global]
+    s_start = times_s[prev_global]
+    s_end = times_s[out_global]
+    dur = s_end - s_start
+    threads_av = jnp.where(slice_cm > 0, dur / jnp.maximum(slice_cm, 1e-30), 1.0)
+    valid = is_out_pos
+    per_worker = jax.ops.segment_sum(jnp.where(valid, slice_cm, 0.0), ws,
+                                     num_segments=num_workers)
+    return (per_worker, idle, valid, ws, s_start, s_end, slice_cm, threads_av,
+            out_global)
+
+
+def _result_from_pairing(log: EventLog, t, outs) -> CMetricResult:
+    (per_worker, idle, valid, ws, s_start, s_end, s_cm, s_av, out_global) = outs
+    valid = np.asarray(valid)
+    out_global = np.asarray(out_global)[valid]
+    order = np.argsort(out_global, kind="stable")    # restore time order
+    sel = lambda x: np.asarray(x)[valid][order]
+    return CMetricResult(
+        per_worker=np.asarray(per_worker, np.float64),
+        slice_worker=sel(ws).astype(np.int32),
+        slice_start=sel(s_start).astype(np.float64),
+        slice_end=sel(s_end).astype(np.float64),
+        slice_cm=sel(s_cm).astype(np.float64),
+        slice_threads_av=sel(s_av).astype(np.float64),
+        slice_stack=log.stacks[out_global[order]],
+        idle_time=float(idle),
+        total_time=float(np.asarray(t)[-1] - np.asarray(t)[0]),
+    )
+
+
+def compute_vectorized(log: EventLog) -> CMetricResult:
+    """Data-parallel CMetric (sort + scans + segment-sum).  Same results as
+    :func:`compute_numpy` up to float32 tolerance; this host-side driver is
+    also reused by the Pallas fold backend (which swaps in its own gcm)."""
+    e = len(log)
+    if e == 0:
+        return _empty_result(log.num_workers)
+    t = jnp.asarray(log.slice_seconds(), jnp.float32)
+    deltas = jnp.asarray(log.deltas, jnp.int32)
+    _, _, gcm, idle = _fold_interval_terms(t, deltas)
+    outs = _pair_and_aggregate(t, jnp.asarray(log.workers), deltas, gcm, idle,
+                               log.num_workers)
+    return _result_from_pairing(log, t, outs)
+
+
+_BACKENDS = {
+    "numpy": compute_numpy,
+    "stream": compute_streaming,
+    "vector": compute_vectorized,
+}
+
+
+def compute(log: EventLog, backend: str = "numpy") -> CMetricResult:
+    if backend == "pallas":                      # lazy import to avoid cycles
+        from repro.kernels import ops
+        return ops.compute_pallas(log)
+    return _BACKENDS[backend](log)

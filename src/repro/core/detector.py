@@ -1,0 +1,195 @@
+"""Bottleneck detection & post-processing (paper §4.4).
+
+Inputs: critical timeslices (from the live tracer or recomputed offline from
+an :class:`EventLog`), and conditional samples from the sampling probe.
+
+Pipeline (exactly the paper's user-space probe):
+  1. attach each sample to the enclosing critical timeslice of its worker;
+  2. *merge* timeslices that share a call path — CMetrics are summed and the
+     sampled tags folded into one frequency table per path;
+  3. rank call paths by cumulative CMetric and keep the top N;
+  4. if a critical slice has no samples and its exit-time active count was
+     ≤ n_min, attach the top-of-stack tag labelled ``stack_top`` (§4.4
+     "Critical timeslices with no samples").
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core import cmetric as cmetric_lib
+from repro.core.events import EventLog, NO_STACK, NO_TAG
+from repro.core.sampler import SampleBuffer, simulate_samples
+from repro.core.tracer import CriticalSlice, StackRegistry, TagRegistry, Tracer
+
+
+@dataclasses.dataclass
+class PathProfile:
+    """One merged call path (the unit of the final ranking)."""
+
+    stack: tuple[int, ...]                 # interned tag ids, caller->callee
+    cmetric: float = 0.0
+    slices: int = 0
+    tag_counts: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    stack_top_counts: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)   # fallback samples (§4.4)
+
+    def top_tags(self, k: int = 5):
+        merged = collections.Counter(self.tag_counts)
+        return merged.most_common(k)
+
+
+@dataclasses.dataclass
+class BottleneckReport:
+    paths: list[PathProfile]               # sorted by cmetric, desc, top-N
+    per_worker: np.ndarray                 # cumulative CMetric per worker
+    worker_names: list[str]
+    tag_names: list[str]
+    tag_locations: list[str]
+    total_critical: int
+    total_slices: int
+    idle_time: float
+    total_time: float
+
+    @property
+    def critical_ratio(self) -> float:     # paper Table 2 "CR" column
+        return self.total_critical / max(self.total_slices, 1)
+
+    def tag_name(self, tid: int) -> str:
+        if 0 <= tid < len(self.tag_names):
+            return self.tag_names[tid]
+        return "<unknown>"
+
+    def path_str(self, p: PathProfile) -> str:
+        return " > ".join(self.tag_name(t) for t in p.stack) or "<no-path>"
+
+
+def _merge(
+    slices: list[CriticalSlice],
+    samples: SampleBuffer | None,
+    stacks: StackRegistry,
+    n_min: float,
+) -> tuple[dict[tuple, PathProfile], int]:
+    """Steps 1/2/4: sample attachment, path merge, stack-top fallback."""
+    by_path: dict[tuple, PathProfile] = {}
+    if not slices:
+        return by_path, 0
+    if samples is not None and len(samples):
+        st, sw, stag = samples.frozen()
+        order = np.lexsort((st, sw))
+        st, sw, stag = st[order], sw[order], stag[order]
+    else:
+        st = np.zeros(0, np.int64)
+        sw = np.zeros(0, np.int32)
+        stag = np.zeros(0, np.int32)
+    attached = 0
+    for cs in slices:
+        path = stacks.paths[cs.stack_id] if 0 <= cs.stack_id < len(stacks.paths) \
+            else ()
+        prof = by_path.get(path)
+        if prof is None:
+            prof = by_path[path] = PathProfile(stack=path)
+        prof.cmetric += cs.cm
+        prof.slices += 1
+        # samples of this worker inside [start, end]
+        lo = np.searchsorted(sw, cs.worker, side="left")
+        hi = np.searchsorted(sw, cs.worker, side="right")
+        a = lo + np.searchsorted(st[lo:hi], cs.start_ns, side="left")
+        b = lo + np.searchsorted(st[lo:hi], cs.end_ns, side="right")
+        if b > a:
+            prof.tag_counts.update(stag[a:b].tolist())
+            attached += int(b - a)
+        elif cs.n_at_exit <= n_min and path:
+            # no samples: fall back to the stack top (caller return address)
+            prof.stack_top_counts.update([path[-1]])
+    return by_path, attached
+
+
+def detect(
+    tracer: Tracer,
+    samples: SampleBuffer | None = None,
+    top_n: int = 10,
+) -> BottleneckReport:
+    """Live-mode detection straight from the tracer's online state."""
+    n_min = tracer._resolved_n_min()
+    by_path, _ = _merge(tracer.critical, samples, tracer.stacks, n_min)
+    paths = sorted(by_path.values(), key=lambda p: -p.cmetric)[:top_n]
+    log_len = min(tracer.ring.head, tracer.ring.capacity)
+    total_slices = int(np.sum(
+        tracer.ring.deltas[:log_len] == -1)) if log_len else 0
+    return BottleneckReport(
+        paths=paths,
+        per_worker=tracer.per_worker_cm(),
+        worker_names=tracer.worker_names(),
+        tag_names=list(tracer.tags.names),
+        tag_locations=list(tracer.tags.locations),
+        total_critical=len(tracer.critical),
+        total_slices=total_slices,
+        idle_time=tracer.idle_time,
+        total_time=((tracer.t_switch - tracer.t_first) * 1e-9
+                    if tracer.t_first is not None else 0.0),
+    )
+
+
+def detect_offline(
+    log: EventLog,
+    tags: TagRegistry,
+    stacks: StackRegistry,
+    n_min: float,
+    samples: SampleBuffer | None = None,
+    sample_dt_ns: int | None = None,
+    backend: str = "numpy",
+    top_n: int = 10,
+    worker_names: list[str] | None = None,
+) -> BottleneckReport:
+    """Offline pipeline: recompute CMetric from a raw event log with any
+    backend (numpy / stream / vector / pallas), optionally replaying the
+    sampling probe, then run the same merge+rank post-processing."""
+    res = cmetric_lib.compute(log, backend=backend)
+    if samples is None and sample_dt_ns is not None:
+        samples = simulate_samples(log, sample_dt_ns, n_min)
+    crit = critical_slices_from_result(log, res, n_min)
+    by_path, _ = _merge(crit, samples, stacks, n_min)
+    paths = sorted(by_path.values(), key=lambda p: -p.cmetric)[:top_n]
+    return BottleneckReport(
+        paths=paths,
+        per_worker=res.per_worker,
+        worker_names=worker_names or [f"w{i}" for i in range(log.num_workers)],
+        tag_names=list(tags.names),
+        tag_locations=list(tags.locations),
+        total_critical=len(crit),
+        total_slices=res.num_slices,
+        idle_time=res.idle_time,
+        total_time=res.total_time,
+    )
+
+
+def critical_slices_from_result(
+    log: EventLog, res: cmetric_lib.CMetricResult, n_min: float,
+) -> list[CriticalSlice]:
+    """Rebuild CriticalSlice records from an offline CMetric result.
+
+    Slice times in the result are rebased seconds; convert back to the log's
+    ns timeline so samples (which carry ns timestamps) can be attached.
+    """
+    t0 = int(log.times[0]) if len(log) else 0
+    mask = res.critical_mask(n_min)
+    out: list[CriticalSlice] = []
+    # instantaneous active count at exit: recompute from the log
+    counts = np.cumsum(log.deltas.astype(np.int64))
+    out_positions = np.flatnonzero(log.deltas == -1)
+    n_at_exit = counts[out_positions] + 1   # count before the decrement
+    for i in np.flatnonzero(mask):
+        out.append(CriticalSlice(
+            worker=int(res.slice_worker[i]),
+            start_ns=t0 + int(round(res.slice_start[i] * 1e9)),
+            end_ns=t0 + int(round(res.slice_end[i] * 1e9)),
+            cm=float(res.slice_cm[i]),
+            threads_av=float(res.slice_threads_av[i]),
+            stack_id=int(res.slice_stack[i]),
+            n_at_exit=int(n_at_exit[i]) if i < len(n_at_exit) else 1,
+        ))
+    return out

@@ -1,0 +1,149 @@
+"""Event model for the GAPP profiler.
+
+The unit of observation is a *state-change event* of a logical worker:
+
+    ACTIVATE   (+1)  — the worker becomes busy (paper: switched in / woken up)
+    DEACTIVATE (-1)  — the worker becomes idle (paper: switched out, blocked)
+
+Events are stored struct-of-arrays (times are monotonic ns int64) so the
+CMetric fold can run vectorised in numpy / JAX / Pallas without any Python
+object overhead — the software analogue of the paper's in-kernel eBPF maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+ACTIVATE = 1
+DEACTIVATE = -1
+
+# Sentinel ids
+NO_TAG = -1
+NO_STACK = -1
+
+
+@dataclasses.dataclass
+class EventLog:
+    """A finished, time-sorted event log.
+
+    Attributes:
+      times:   int64[E] monotonic timestamps (ns)
+      workers: int32[E] logical worker ids (dense, 0..num_workers-1)
+      deltas:  int8[E]  +1 activate / -1 deactivate
+      tags:    int32[E] current top-of-stack tag id at the event (NO_TAG if none)
+      stacks:  int32[E] interned call-path id recorded at DEACTIVATE (NO_STACK
+               otherwise).  The call path is the worker's tag stack, truncated
+               to the top ``M`` frames (paper §4.2).
+      num_workers: total number of registered workers (paper: total_count)
+    """
+
+    times: np.ndarray
+    workers: np.ndarray
+    deltas: np.ndarray
+    tags: np.ndarray
+    stacks: np.ndarray
+    num_workers: int
+
+    def __len__(self) -> int:
+        return int(self.times.shape[0])
+
+    def validate(self) -> None:
+        if len(self) == 0:
+            return
+        if np.any(np.diff(self.times) < 0):
+            raise ValueError("event log is not time sorted")
+        if not np.all(np.abs(self.deltas) == 1):
+            raise ValueError("deltas must be +1/-1")
+        # A worker must alternate ACTIVATE/DEACTIVATE.
+        for w in range(self.num_workers):
+            d = self.deltas[self.workers == w]
+            if d.size and (d[0] != ACTIVATE or np.any(d[1:] == d[:-1])):
+                raise ValueError(f"worker {w} events do not alternate")
+
+    def slice_seconds(self) -> np.ndarray:
+        """Times rebased to t0 in float64 seconds (device-friendly)."""
+        if len(self) == 0:
+            return np.zeros((0,), np.float64)
+        return (self.times - self.times[0]).astype(np.float64) * 1e-9
+
+
+class EventRing:
+    """Pre-allocated ring buffer for events (paper's eBPF ring buffer).
+
+    Append is O(1) into numpy arrays; a short critical section keeps it safe
+    for multi-threaded producers (host threads are real threads here).
+    Overflow wraps and is counted, mirroring BPF ringbuf drop semantics.
+    """
+
+    def __init__(self, capacity: int = 1 << 20):
+        self.capacity = int(capacity)
+        self.times = np.zeros(self.capacity, np.int64)
+        self.workers = np.zeros(self.capacity, np.int32)
+        self.deltas = np.zeros(self.capacity, np.int8)
+        self.tags = np.full(self.capacity, NO_TAG, np.int32)
+        self.stacks = np.full(self.capacity, NO_STACK, np.int32)
+        self.head = 0
+        self.dropped = 0
+        self._lock = threading.Lock()
+
+    def append(self, t: int, worker: int, delta: int, tag: int = NO_TAG,
+               stack: int = NO_STACK) -> None:
+        with self._lock:
+            i = self.head
+            if i >= self.capacity:
+                self.dropped += 1
+                return
+            self.head = i + 1
+        self.times[i] = t
+        self.workers[i] = worker
+        self.deltas[i] = delta
+        self.tags[i] = tag
+        self.stacks[i] = stack
+
+    def freeze(self, num_workers: int) -> EventLog:
+        n = min(self.head, self.capacity)
+        order = np.argsort(self.times[:n], kind="stable")
+        return EventLog(
+            times=self.times[:n][order].copy(),
+            workers=self.workers[:n][order].copy(),
+            deltas=self.deltas[:n][order].copy(),
+            tags=self.tags[:n][order].copy(),
+            stacks=self.stacks[:n][order].copy(),
+            num_workers=num_workers,
+        )
+
+
+def synthetic_log(
+    rng: np.random.Generator,
+    num_workers: int,
+    slices_per_worker: int,
+    busy_ns=(10_000, 1_000_000),
+    idle_ns=(1_000, 500_000),
+    skew: np.ndarray | None = None,
+) -> EventLog:
+    """Generate a well-formed random log (used by tests/benchmarks).
+
+    ``skew`` multiplies per-worker busy durations: a straggler has skew > 1.
+    """
+    times, workers, deltas = [], [], []
+    skew = np.ones(num_workers) if skew is None else np.asarray(skew, np.float64)
+    for w in range(num_workers):
+        t = int(rng.integers(0, idle_ns[1]))
+        for _ in range(slices_per_worker):
+            busy = int(rng.integers(*busy_ns) * skew[w])
+            times += [t, t + busy]
+            workers += [w, w]
+            deltas += [ACTIVATE, DEACTIVATE]
+            t += busy + int(rng.integers(*idle_ns))
+    order = np.argsort(np.asarray(times, np.int64), kind="stable")
+    e = len(times)
+    return EventLog(
+        times=np.asarray(times, np.int64)[order],
+        workers=np.asarray(workers, np.int32)[order],
+        deltas=np.asarray(deltas, np.int8)[order],
+        tags=np.full(e, NO_TAG, np.int32),
+        stacks=np.full(e, NO_STACK, np.int32),
+        num_workers=num_workers,
+    )

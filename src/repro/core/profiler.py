@@ -1,0 +1,99 @@
+"""GAPP facade: tracer + sampling probe + detection, one object.
+
+Typical live use::
+
+    gapp = Gapp(n_min=None, dt=0.003)       # n_min=None => total_workers/2
+    w = gapp.register_worker("data_loader", kind="thread")
+    with gapp.running():
+        with gapp.span(w, "load_batch"):
+            ...
+    print(gapp.render())
+
+Offline use (fleet traces / simulations)::
+
+    rep = profile_log(log, tags, stacks, n_min=32, sample_dt_ns=3_000_000)
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.core import detector as detector_lib
+from repro.core import report as report_lib
+from repro.core.events import EventLog
+from repro.core.sampler import SamplingProbe
+from repro.core.tracer import StackRegistry, TagRegistry, Tracer
+
+
+class Gapp:
+    def __init__(self, n_min: float | None = None, dt: float = 0.003,
+                 top_m: int = 8, top_n: int = 10, capacity: int = 1 << 20,
+                 clock=None):
+        kwargs = {} if clock is None else {"clock": clock}
+        self.tracer = Tracer(n_min=n_min, top_m=top_m, capacity=capacity,
+                             **kwargs)
+        self.probe = SamplingProbe(self.tracer, dt=dt, n_min=n_min)
+        self.top_n = top_n
+
+    # --- worker / span API (delegates) ------------------------------------
+    def register_worker(self, name: str, kind: str = "thread") -> int:
+        return self.tracer.register_worker(name, kind)
+
+    def span(self, wid: int, tag: str):
+        return self.tracer.span(wid, tag)
+
+    def frame(self, wid: int, tag: str):
+        return self.tracer.frame(wid, tag)
+
+    def begin(self, wid: int, tag: str):
+        import sys
+        f = sys._getframe(1)
+        return self.tracer.begin(
+            wid, tag, f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}")
+
+    def end(self, wid: int):
+        return self.tracer.end(wid)
+
+    def ingest(self, *a, **k):
+        return self.tracer.ingest(*a, **k)
+
+    # --- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        self.probe.start()
+
+    def stop(self) -> None:
+        self.probe.stop()
+
+    @contextlib.contextmanager
+    def running(self):
+        self.start()
+        try:
+            yield self
+        finally:
+            self.stop()
+
+    # --- results -------------------------------------------------------------
+    def report(self, top_n: int | None = None) -> detector_lib.BottleneckReport:
+        return detector_lib.detect(self.tracer, self.probe.buffer,
+                                   top_n=top_n or self.top_n)
+
+    def render(self, **kw) -> str:
+        return report_lib.render_text(self.report(), **kw)
+
+    def freeze(self) -> EventLog:
+        return self.tracer.freeze()
+
+
+def profile_log(
+    log: EventLog,
+    tags: TagRegistry,
+    stacks: StackRegistry,
+    n_min: float,
+    sample_dt_ns: int | None = 3_000_000,
+    backend: str = "numpy",
+    top_n: int = 10,
+    worker_names: list[str] | None = None,
+) -> detector_lib.BottleneckReport:
+    """One-call offline pipeline over a raw event log."""
+    return detector_lib.detect_offline(
+        log, tags, stacks, n_min, sample_dt_ns=sample_dt_ns, backend=backend,
+        top_n=top_n, worker_names=worker_names)

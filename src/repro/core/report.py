@@ -1,0 +1,92 @@
+"""Profile rendering — the Figure 7 / Table 2 / Figure 4-5 analogues."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.detector import BottleneckReport
+
+
+def render_text(rep: BottleneckReport, max_paths: int | None = None,
+                max_tags: int = 5, bar_width: int = 40) -> str:
+    """Human-readable profile: ranked call paths with sampled-tag frequency
+    tables (Figure 7) followed by the per-worker CMetric chart (Figure 4/5)."""
+    lines = []
+    lines.append("=" * 72)
+    lines.append("GAPP bottleneck profile")
+    lines.append(f"  wall time        : {rep.total_time * 1e3:10.3f} ms")
+    lines.append(f"  idle (n=0) time  : {rep.idle_time * 1e3:10.3f} ms")
+    lines.append(f"  timeslices       : {rep.total_slices}")
+    lines.append(f"  critical slices  : {rep.total_critical} "
+                 f"(CR {100.0 * rep.critical_ratio:.2f}%)")
+    lines.append("=" * 72)
+    paths = rep.paths if max_paths is None else rep.paths[:max_paths]
+    for rank, p in enumerate(paths, 1):
+        lines.append(f"#{rank}  CMetric {p.cmetric * 1e3:.3f} ms over "
+                     f"{p.slices} slice(s)")
+        lines.append(f"    path: {rep.path_str(p)}")
+        total = sum(p.tag_counts.values())
+        for tid, cnt in p.top_tags(max_tags):
+            loc = rep.tag_locations[tid] if tid < len(rep.tag_locations) else "?"
+            lines.append(f"      {cnt:6d} ({100.0 * cnt / max(total, 1):5.1f}%) "
+                         f"{rep.tag_name(tid)}  [{loc}]")
+        for tid, cnt in p.stack_top_counts.most_common(max_tags):
+            lines.append(f"      {cnt:6d} (stack_top) {rep.tag_name(tid)}")
+        lines.append("")
+    # bottleneck classification (paper §7 extension)
+    from repro.core.wakers import classify_report
+    classes = classify_report(rep)
+    if classes:
+        total_cm = sum(classes.values())
+        parts = ", ".join(f"{k} {v / total_cm * 100:.0f}%" for k, v in
+                          sorted(classes.items(), key=lambda kv: -kv[1]))
+        lines.append(f"critical CMetric by class: {parts}")
+        lines.append("")
+    lines.append("per-worker CMetric")
+    top = float(np.max(rep.per_worker)) if rep.per_worker.size else 0.0
+    for wid in np.argsort(-rep.per_worker):
+        v = float(rep.per_worker[wid])
+        n = int(bar_width * v / top) if top > 0 else 0
+        name = rep.worker_names[wid] if wid < len(rep.worker_names) else str(wid)
+        lines.append(f"  {name:>24s} {v * 1e3:12.3f} ms |{'#' * n}")
+    return "\n".join(lines)
+
+
+def to_json(rep: BottleneckReport) -> str:
+    return json.dumps({
+        "total_time_s": rep.total_time,
+        "idle_time_s": rep.idle_time,
+        "total_slices": rep.total_slices,
+        "total_critical": rep.total_critical,
+        "critical_ratio": rep.critical_ratio,
+        "per_worker_cmetric_s": rep.per_worker.tolist(),
+        "worker_names": rep.worker_names,
+        "paths": [
+            {
+                "rank": i + 1,
+                "path": rep.path_str(p),
+                "cmetric_s": p.cmetric,
+                "slices": p.slices,
+                "samples": {rep.tag_name(t): c for t, c in
+                            p.tag_counts.most_common()},
+                "stack_top": {rep.tag_name(t): c for t, c in
+                              p.stack_top_counts.most_common()},
+            }
+            for i, p in enumerate(rep.paths)
+        ],
+    }, indent=2)
+
+
+def imbalance_stats(per_worker: np.ndarray) -> dict:
+    """Summary statistics used by the load-balance experiments (Fig. 4/5):
+    coefficient of variation and max/mean ratio of per-worker CMetric."""
+    pw = np.asarray(per_worker, np.float64)
+    mean = float(pw.mean()) if pw.size else 0.0
+    return {
+        "mean": mean,
+        "std": float(pw.std()) if pw.size else 0.0,
+        "cv": float(pw.std() / mean) if mean > 0 else 0.0,
+        "max_over_mean": float(pw.max() / mean) if mean > 0 else 0.0,
+        "argmax": int(pw.argmax()) if pw.size else -1,
+    }

@@ -1,0 +1,65 @@
+"""Chrome-trace export: drop the event log into chrome://tracing / Perfetto.
+
+Each worker becomes a track; spans become complete ('X') events; critical
+slices are emitted on a separate "critical" track with the CMetric attached
+as an argument, so the eye goes straight to what the ranking found.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.events import EventLog
+from repro.core.tracer import Tracer
+
+
+def to_chrome_trace(log: EventLog, tag_names: list[str] | None = None,
+                    worker_names: list[str] | None = None,
+                    critical=None) -> str:
+    """Serialize an EventLog as a Chrome trace JSON string.
+
+    ``critical``: optional list of CriticalSlice to overlay.
+    """
+    events = []
+    open_spans: dict[int, tuple[int, int]] = {}
+    for t, w, d, tag in zip(log.times, log.workers, log.deltas, log.tags):
+        if d == 1:
+            open_spans[int(w)] = (int(t), int(tag))
+        else:
+            start = open_spans.pop(int(w), None)
+            if start is None:
+                continue
+            t0, tag0 = start
+            name = tag_names[tag0] if tag_names and 0 <= tag0 < len(tag_names) \
+                else f"tag{tag0}"
+            events.append({
+                "name": name, "ph": "X", "pid": 0, "tid": int(w),
+                "ts": t0 / 1e3, "dur": (int(t) - t0) / 1e3,
+            })
+    meta = []
+    if worker_names:
+        for wid, name in enumerate(worker_names):
+            meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+                         "tid": wid, "args": {"name": name}})
+    for cs in critical or []:
+        events.append({
+            "name": "CRITICAL", "ph": "X", "pid": 1, "tid": cs.worker,
+            "ts": cs.start_ns / 1e3, "dur": (cs.end_ns - cs.start_ns) / 1e3,
+            "args": {"cmetric_ms": cs.cm * 1e3,
+                     "threads_av": cs.threads_av},
+        })
+    if critical:
+        meta.append({"name": "process_name", "ph": "M", "pid": 1,
+                     "args": {"name": "critical slices"}})
+    return json.dumps({"traceEvents": meta + events,
+                       "displayTimeUnit": "ms"})
+
+
+def dump_chrome_trace(tracer: Tracer, path: str) -> None:
+    log = tracer.freeze()
+    data = to_chrome_trace(log, tag_names=list(tracer.tags.names),
+                           worker_names=tracer.worker_names(),
+                           critical=tracer.critical)
+    with open(path, "w") as f:
+        f.write(data)

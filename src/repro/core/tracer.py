@@ -1,0 +1,273 @@
+"""Runtime tracer — the software analogue of GAPP's kernel probes.
+
+The tracer plays the role of the eBPF ``sched_switch`` probe: every span
+begin/end is a state-change event, and the probe body maintains *exactly* the
+eBPF maps of paper Table 1, online, in O(1) per event:
+
+    global_cm     running Σ T_i / n_i                      (global scalar)
+    local_cm[w]   global_cm snapshot at switch-in          (per-worker)
+    thread_count  number of active workers                 (global scalar)
+    total_count   number of registered workers             (global scalar)
+    cm_hash[w]    cumulative CMetric per worker            (global hash)
+    t_switch      timestamp of the previous event          (local scalar)
+
+As in the paper, call paths are captured **only** when a finished timeslice is
+critical (``threads_av < n_min``) — the key low-overhead design rule — and raw
+events additionally go to a ring buffer so the offline backends (streaming /
+vectorised / Pallas) can recompute and cross-validate the online numbers.
+
+Workers are *logical*: host threads, DP hosts, pipeline stages, MoE experts.
+``register_worker`` mirrors the paper's ``task_newtask`` probe.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import sys
+import threading
+import time
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.events import ACTIVATE, DEACTIVATE, NO_STACK, NO_TAG, EventLog, EventRing
+
+
+@dataclasses.dataclass
+class CriticalSlice:
+    worker: int
+    start_ns: int
+    end_ns: int
+    cm: float            # seconds
+    threads_av: float
+    stack_id: int
+    n_at_exit: int       # instantaneous active count at switch-out
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    wid: int
+    name: str
+    kind: str            # "host" | "thread" | "stage" | "expert" | "device"
+
+
+class TagRegistry:
+    """tag string -> dense id, with code location (the addr2line analogue)."""
+
+    def __init__(self):
+        self._ids: dict[str, int] = {}
+        self.names: list[str] = []
+        self.locations: list[str] = []
+        self._lock = threading.Lock()
+
+    def intern(self, tag: str, location: str | None = None) -> int:
+        tid = self._ids.get(tag)
+        if tid is not None:
+            return tid
+        with self._lock:
+            tid = self._ids.get(tag)
+            if tid is None:
+                tid = len(self.names)
+                self._ids[tag] = tid
+                self.names.append(tag)
+                self.locations.append(location or "<unknown>")
+        return tid
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+class StackRegistry:
+    """Interned call paths (tuples of tag ids), truncated to top-M frames."""
+
+    def __init__(self, top_m: int = 8):
+        self.top_m = top_m
+        self._ids: dict[tuple, int] = {}
+        self.paths: list[tuple] = []
+        self._lock = threading.Lock()
+
+    def intern(self, stack: tuple) -> int:
+        stack = stack[-self.top_m:]
+        sid = self._ids.get(stack)
+        if sid is not None:
+            return sid
+        with self._lock:
+            sid = self._ids.get(stack)
+            if sid is None:
+                sid = len(self.paths)
+                self._ids[stack] = sid
+                self.paths.append(stack)
+        return sid
+
+    def __len__(self) -> int:
+        return len(self.paths)
+
+
+class Tracer:
+    """Low-overhead span tracer with online CMetric (the kernel-probe body)."""
+
+    def __init__(self, n_min: float | None = None, top_m: int = 8,
+                 capacity: int = 1 << 20, clock=time.perf_counter_ns):
+        self.n_min = n_min              # None => total_count/2, resolved lazily
+        self.clock = clock
+        self.tags = TagRegistry()
+        self.stacks = StackRegistry(top_m)
+        self.ring = EventRing(capacity)
+        self.workers: list[WorkerInfo] = []
+        self._tag_stacks: dict[int, list[int]] = {}
+        self._open: set[int] = set()      # workers with an open slice
+        # eBPF-map state (paper Table 1)
+        self.global_cm = 0.0
+        self.local_cm: dict[int, float] = {}
+        self.slice_start: dict[int, int] = {}
+        self.thread_count = 0
+        self.cm_hash: dict[int, float] = {}
+        self.idle_time = 0.0
+        self.t_switch: int | None = None
+        self.t_first: int | None = None
+        self.critical: list[CriticalSlice] = []
+        self._lock = threading.Lock()
+        self.enabled = True
+
+    # -- task_newtask analogue ----------------------------------------------
+    def register_worker(self, name: str, kind: str = "thread") -> int:
+        with self._lock:
+            wid = len(self.workers)
+            self.workers.append(WorkerInfo(wid, name, kind))
+            self._tag_stacks[wid] = []
+            self.cm_hash[wid] = 0.0
+            self.local_cm[wid] = 0.0
+        return wid
+
+    @property
+    def total_count(self) -> int:
+        return len(self.workers)
+
+    def _resolved_n_min(self) -> float:
+        return self.n_min if self.n_min is not None else self.total_count / 2
+
+    # -- the sched_switch probe body (call with self._lock held) -------------
+    def _event(self, t: int, wid: int, delta: int, tag: int, stack: int) -> None:
+        if self.t_first is None:
+            self.t_first = t
+        dt = (t - self.t_switch) * 1e-9 if self.t_switch is not None else 0.0
+        if self.thread_count > 0:
+            self.global_cm += dt / self.thread_count
+        else:
+            self.idle_time += dt
+        self.t_switch = t
+        if delta == ACTIVATE:
+            if wid in self._open:      # paper §3.2: already-running threads
+                return                 # do not alter thread_count
+            self.local_cm[wid] = self.global_cm
+            self.slice_start[wid] = t
+            self.thread_count += 1
+            self._open.add(wid)
+        else:
+            if wid not in self._open:  # spurious switch-out: ignore
+                return
+            slice_cm = self.global_cm - self.local_cm[wid]
+            self.cm_hash[wid] = self.cm_hash.get(wid, 0.0) + slice_cm
+            self.thread_count -= 1
+            self._open.discard(wid)
+            dur = (t - self.slice_start.get(wid, t)) * 1e-9
+            threads_av = dur / slice_cm if slice_cm > 0 else float(
+                max(self.thread_count + 1, 1))
+            if threads_av < self._resolved_n_min():
+                self.critical.append(CriticalSlice(
+                    wid, self.slice_start.get(wid, t), t, slice_cm,
+                    threads_av, stack, self.thread_count + 1))
+        self.ring.append(t, wid, delta, tag, stack)
+
+    # -- public span API ------------------------------------------------------
+    def begin(self, wid: int, tag: str, location: str | None = None) -> int:
+        if not self.enabled:
+            return NO_TAG
+        if location is None:
+            f = sys._getframe(1)
+            location = f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}"
+        tid = self.tags.intern(tag, location)
+        with self._lock:
+            self._tag_stacks[wid].append(tid)
+            self._event(self.clock(), wid, ACTIVATE, tid, NO_STACK)
+        return tid
+
+    def end(self, wid: int) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            st = self._tag_stacks[wid]
+            sid = self.stacks.intern(tuple(st))
+            tid = st.pop() if st else NO_TAG
+            self._event(self.clock(), wid, DEACTIVATE, tid, sid)
+
+    @contextlib.contextmanager
+    def span(self, wid: int, tag: str) -> Iterator[None]:
+        f = sys._getframe(2)
+        self.begin(wid, tag, f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}")
+        try:
+            yield
+        finally:
+            self.end(wid)
+
+    # Tag refinement inside an active span: adds call-path context without a
+    # scheduling event (the worker stays active).
+    def push(self, wid: int, tag: str) -> None:
+        tid = self.tags.intern(tag)
+        with self._lock:
+            self._tag_stacks[wid].append(tid)
+
+    def pop(self, wid: int) -> None:
+        with self._lock:
+            st = self._tag_stacks[wid]
+            if st:
+                st.pop()
+
+    @contextlib.contextmanager
+    def frame(self, wid: int, tag: str) -> Iterator[None]:
+        self.push(wid, tag)
+        try:
+            yield
+        finally:
+            self.pop(wid)
+
+    # -- sampling-probe read: 'instruction pointer' of each active worker ----
+    def active_tags(self) -> list[tuple[int, int]]:
+        with self._lock:
+            return [(wid, self._tag_stacks[wid][-1])
+                    for wid in self._open if self._tag_stacks.get(wid)]
+
+    # -- ingestion of external (synthetic / device-side) event streams -------
+    def ingest(self, t: int, wid: int, delta: int, tag: str = "",
+               stack: tuple[str, ...] = ()) -> None:
+        """Feed a pre-timestamped event (simulated fleet trace, device timing
+        stream) through the same probe body as live spans."""
+        tid = self.tags.intern(tag) if tag else NO_TAG
+        with self._lock:
+            if delta == ACTIVATE:
+                self._tag_stacks[wid].append(tid)
+                self._event(t, wid, ACTIVATE, tid, NO_STACK)
+            else:
+                st = self._tag_stacks[wid]
+                if stack:
+                    sid = self.stacks.intern(
+                        tuple(self.tags.intern(s) for s in stack))
+                elif st:
+                    sid = self.stacks.intern(tuple(st))
+                else:
+                    sid = NO_STACK
+                self._event(t, wid, DEACTIVATE, tid, sid)
+                if st:
+                    st.pop()
+
+    def freeze(self) -> EventLog:
+        return self.ring.freeze(self.total_count)
+
+    def per_worker_cm(self) -> np.ndarray:
+        out = np.zeros(self.total_count)
+        for w, v in self.cm_hash.items():
+            out[w] = v
+        return out
+
+    def worker_names(self) -> list[str]:
+        return [w.name for w in self.workers]

@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic sources + instrumented prefetch."""
+from repro.data.pipeline import PrefetchLoader, SyntheticLM  # noqa: F401

@@ -1,0 +1,2 @@
+"""Fault tolerance: straggler monitor + crash-restart driver."""
+from repro.ft.monitor import StragglerMonitor, run_with_restarts  # noqa: F401

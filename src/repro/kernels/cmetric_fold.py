@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: the CMetric interval fold (paper §4.1 hot loop).
+
+At fleet scale the profiler ingests tens of millions of events per run
+(every span begin/end across hosts, stages and experts).  The fold below is
+the post-processing hot spot the paper keeps fast ("PPT" column of Table 2):
+for every event we need the active-worker count during the preceding
+interval and the running ``global_cm`` prefix
+
+    n[i]   = Σ_{e<=i} delta[e]
+    gcm[i] = Σ_{e<i}  dt[e] / max(n[e], 1) * (n[e] > 0)
+
+i.e. two coupled prefix scans over the event stream.  TPU adaptation: the
+stream is tiled into (1, B) VMEM blocks (B a multiple of 128 lanes); within a
+block the scan is a Hillis–Steele shift-add ladder (log2 B vector steps on
+the VPU); the inter-block carry (running count, running gcm, idle time) lives
+in a small VMEM scratch accumulator that persists across the sequential TPU
+grid.  HBM traffic is exactly 2 input + 2 output streams — the kernel is
+memory-bound by design, matching its roofline on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _ladder_cumsum(x):
+    """Inclusive Hillis-Steele cumsum along the last axis of a (1, B) block.
+
+    Unrolled log2(B) shift-add steps; every step is a full-width VPU add, so
+    the ladder costs ~log2(B) vector ops per block (B must be a power of 2).
+    """
+    b = x.shape[-1]
+    shift = 1
+    while shift < b:
+        shifted = jnp.pad(x, ((0, 0), (shift, 0)))[:, :b]
+        x = x + shifted
+        shift *= 2
+    return x
+
+
+def _fold_kernel(dt_ref, delta_ref, n_ref, gcm_ref, carry_ref, scalars_ref):
+    """Grid is 1-D over event blocks; TPU executes it sequentially, so the
+    carry scratch implements the cross-block prefix."""
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        carry_ref[0, 0] = 0.0   # running count (as f32; exact for |n| < 2^24)
+        carry_ref[0, 1] = 0.0   # running gcm
+        carry_ref[0, 2] = 0.0   # running idle time
+
+    count_in = carry_ref[0, 0]
+    gcm_in = carry_ref[0, 1]
+    idle_in = carry_ref[0, 2]
+
+    delta = delta_ref[...].astype(jnp.float32)
+    dt = dt_ref[...]
+
+    n = _ladder_cumsum(delta) + count_in            # inclusive count prefix
+    pos = n > 0.5
+    contrib = jnp.where(pos, dt / jnp.maximum(n, 1.0), 0.0)
+    incl = _ladder_cumsum(contrib)
+    gcm = gcm_in + incl - contrib                    # exclusive prefix
+    idle_blk = jnp.sum(jnp.where((~pos) & (dt > 0), dt, 0.0))
+
+    n_ref[...] = n.astype(jnp.int32)
+    gcm_ref[...] = gcm
+
+    carry_ref[0, 0] = n[0, -1]
+    carry_ref[0, 1] = gcm_in + incl[0, -1]
+    carry_ref[0, 2] = idle_in + idle_blk
+
+    @pl.when(blk == pl.num_programs(0) - 1)
+    def _finalize():
+        scalars_ref[0, 0] = gcm_in + incl[0, -1]     # total_cm
+        scalars_ref[0, 1] = idle_in + idle_blk       # idle
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fold(dt, deltas, *, block: int = 2048, interpret: bool = True):
+    """Blocked CMetric fold.  See :func:`repro.kernels.ref.fold_ref`.
+
+    Args:
+      dt:     f32[E] interval lengths (last entry 0).
+      deltas: i32[E] state-change deltas (+1/-1, 0 padding).
+      block:  events per VMEM tile (power of two, multiple of 128).
+
+    Returns (n i32[E], gcm f32[E], total_cm f32, idle f32).
+    """
+    assert block % LANES == 0 and block & (block - 1) == 0, block
+    e = dt.shape[0]
+    pad = (-e) % block
+    dt_p = jnp.pad(dt.astype(jnp.float32), (0, pad)).reshape(1, -1)
+    de_p = jnp.pad(deltas.astype(jnp.int32), (0, pad)).reshape(1, -1)
+    nblk = dt_p.shape[1] // block
+
+    n, gcm, _, scalars = pl.pallas_call(
+        _fold_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),  # carry accumulator
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),  # final scalars
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nblk * block), jnp.int32),
+            jax.ShapeDtypeStruct((1, nblk * block), jnp.float32),
+            jax.ShapeDtypeStruct((1, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((1, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dt_p, de_p)
+    return (n[0, :e], gcm[0, :e], scalars[0, 0], scalars[0, 1])

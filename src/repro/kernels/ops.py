@@ -1,0 +1,51 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU v5e
+is the compile target) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import cmetric_fold as _fold
+from repro.kernels import tag_hist as _hist
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cmetric_fold(times_s, deltas, *, block: int = 2048,
+                 interpret: bool | None = None):
+    """Fold an event stream into (n, gcm, total_cm, idle).
+
+    ``times_s`` are event times (f32 seconds, rebased); dt is derived here so
+    callers hand over the raw stream.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    dt = jnp.concatenate([times_s[1:] - times_s[:-1],
+                          jnp.zeros((1,), times_s.dtype)])
+    return _fold.fold(dt, deltas, block=block, interpret=interpret)
+
+
+def tag_histogram(tags, weights=None, *, num_bins: int, block: int = 1024,
+                  interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _hist.hist(tags, weights, num_bins=num_bins, block=block,
+                      interpret=interpret)
+
+
+def compute_pallas(log):
+    """CMetric backend using the Pallas fold for the prefix stage and the
+    shared pairing/aggregation stage for the rest."""
+    from repro.core import cmetric as cmetric_lib  # avoid import cycle
+    if len(log) == 0:
+        return cmetric_lib.compute_numpy(log)
+    t = jnp.asarray(log.slice_seconds(), jnp.float32)
+    deltas = jnp.asarray(log.deltas, jnp.int32)
+    _, gcm, _, idle = cmetric_fold(t, deltas)
+    outs = cmetric_lib._pair_and_aggregate(
+        t, jnp.asarray(log.workers), deltas, gcm, idle, log.num_workers)
+    return cmetric_lib._result_from_pairing(log, t, outs)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fold_ref(dt, deltas):
+    """Reference for the CMetric interval fold.
+
+    Args:
+      dt:     f32[E] interval lengths; ``dt[i] = t[i+1]-t[i]`` (last entry 0).
+      deltas: i32[E] +1 activate / -1 deactivate (0 allowed for padding).
+
+    Returns:
+      n:        i32[E] active-worker count during interval i (after event i)
+      gcm:      f32[E] global_cm value when event i fires (exclusive prefix)
+      total_cm: f32[]  final global_cm
+      idle:     f32[]  total time with n == 0
+    """
+    n = jnp.cumsum(deltas.astype(jnp.int32))
+    contrib = jnp.where(n > 0, dt / jnp.maximum(n, 1).astype(dt.dtype), 0.0)
+    incl = jnp.cumsum(contrib)
+    gcm = incl - contrib                     # exclusive prefix
+    idle = jnp.sum(jnp.where((n <= 0) & (dt > 0), dt, 0.0))
+    return n, gcm, incl[-1], idle
+
+
+def hist_ref(tags, num_bins: int):
+    """Reference for the sample-tag histogram: i32[K] counts.
+
+    Negative tags (NO_TAG / padding) are ignored.
+    """
+    valid = tags >= 0
+    clipped = jnp.clip(tags, 0, num_bins - 1)
+    onehot_sum = jnp.zeros((num_bins,), jnp.int32).at[clipped].add(
+        valid.astype(jnp.int32))
+    return onehot_sum
+
+
+def weighted_hist_ref(tags, weights, num_bins: int):
+    """Reference for the CMetric-weighted histogram (merge step): f32[K]."""
+    valid = tags >= 0
+    clipped = jnp.clip(tags, 0, num_bins - 1)
+    return jnp.zeros((num_bins,), weights.dtype).at[clipped].add(
+        jnp.where(valid, weights, 0))

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: sample-tag frequency histogram (paper §4.4 merge step).
+
+The user-space post-processing merges sampled 'instruction pointers' (here:
+tag ids) into per-call-path frequency tables.  On TPU, scatter-add is the
+wrong shape — instead each (1, B) block of samples is compared against the
+(1, K) bin ids with a broadcast equality, reduced over the sample axis on
+the VPU, and accumulated into a VMEM-resident output block across the
+sequential grid.  A weighted variant (weights = slice CMetrics) computes the
+cumulative-CMetric-per-tag table in the same pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _hist_kernel(tags_ref, w_ref, counts_ref, wsum_ref, *, bins_per_blk):
+    # Grid is (k-blocks, sample-blocks): the sample (reduction) dimension is
+    # innermost so revisits of an output block are consecutive — the TPU
+    # accumulation pattern.
+    kblk = pl.program_id(0)
+    sblk = pl.program_id(1)
+
+    @pl.when(sblk == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        wsum_ref[...] = jnp.zeros_like(wsum_ref)
+
+    tags = tags_ref[...]                               # (1, B) i32
+    w = w_ref[...]                                     # (1, B) f32
+    base = kblk * bins_per_blk
+    bins = base + jax.lax.broadcasted_iota(jnp.int32, (1, bins_per_blk), 1)
+    # (B, K) one-hot comparison; negative tags (padding / NO_TAG) never match
+    onehot = tags.reshape(-1, 1) == bins.reshape(1, -1)
+    counts_ref[...] += jnp.sum(onehot, axis=0, dtype=jnp.int32).reshape(1, -1)
+    wsum_ref[...] += jnp.sum(
+        jnp.where(onehot, w.reshape(-1, 1), 0.0), axis=0).reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "block",
+                                             "bins_per_blk", "interpret"))
+def hist(tags, weights=None, *, num_bins: int, block: int = 1024,
+         bins_per_blk: int = 512, interpret: bool = True):
+    """Histogram + weighted histogram of tag ids.
+
+    Args:
+      tags:    i32[S] tag ids; negative = ignore.
+      weights: f32[S] per-sample weights (defaults to ones).
+      num_bins: K (padded up to a lane multiple internally).
+
+    Returns (counts i32[K], wsum f32[K]).
+    """
+    s = tags.shape[0]
+    if weights is None:
+        weights = jnp.ones((s,), jnp.float32)
+    pad_s = (-s) % block
+    kp = max(LANES, ((num_bins + bins_per_blk - 1) // bins_per_blk)
+             * bins_per_blk)
+    tags_p = jnp.pad(tags.astype(jnp.int32), (0, pad_s),
+                     constant_values=-1).reshape(1, -1)
+    w_p = jnp.pad(weights.astype(jnp.float32), (0, pad_s)).reshape(1, -1)
+    nsblk = tags_p.shape[1] // block
+    nkblk = kp // bins_per_blk
+
+    counts, wsum = pl.pallas_call(
+        functools.partial(_hist_kernel, bins_per_blk=bins_per_blk),
+        grid=(nkblk, nsblk),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda j, i: (0, i)),
+            pl.BlockSpec((1, block), lambda j, i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bins_per_blk), lambda j, i: (0, j)),
+            pl.BlockSpec((1, bins_per_blk), lambda j, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, kp), jnp.int32),
+            jax.ShapeDtypeStruct((1, kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tags_p, w_p)
+    return counts[0, :num_bins], wsum[0, :num_bins]

@@ -1,0 +1,1 @@
+"""Launch: meshes, dry-run, roofline, train driver."""

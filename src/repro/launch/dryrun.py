@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the process entry point (``python -m repro.launch.dryrun``): the two
+lines above run before any jax import so the 512 placeholder devices exist
+when jax initialises.  For each cell the step function is lowered with
+ShapeDtypeStruct inputs (no allocation), compiled for the production mesh,
+and the compiled artifact's memory_analysis / cost_analysis / collective
+schedule are recorded for EXPERIMENTS.md §Dry-run and §Roofline.
+
+  train_4k      -> train_step (fwd+bwd+AdamW update)
+  prefill_32k   -> prefill (full forward, last-token logits)
+  decode_32k/long_500k -> serve_step (one token against the KV/recurrent
+                   state at seq_len)
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roofline_lib
+from repro.launch import specs as specs_lib
+from repro.models import decode_step, init_lm
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.serve.engine import make_prefill_step
+from repro.sharding import api as shapi
+from repro.sharding import params as shparams
+from repro.train.step import make_train_step
+
+# Per-arch logical-axis overrides (see DESIGN.md §5).
+ARCH_RULES: dict[str, dict] = {
+    # grok: 8 experts cannot shard a 16-way axis -> TP experts over 'model',
+    # FSDP-style weight sharding of the big expert tables over 'data'.
+    "grok-1-314b": {"experts": None, "expert_in": "data",
+                    "expert_mlp": "model"},
+    # arctic: 128 experts -> EP over 'data' (8/chip-row), TP over 'model'.
+    "arctic-480b": {"experts": "data", "expert_in": None,
+                    "expert_mlp": "model"},
+}
+
+# Shape-kind overrides: decode shards the KV cache sequence over 'model'
+# (flash-decode); training/prefill keep activations DP + heads TP.
+KIND_RULES: dict[str, dict] = {
+    "decode": {"cache_seq": "model"},
+    "prefill": {},
+    "train": {},
+}
+
+
+def rules_for(arch: str, kind: str, extra: dict | None = None):
+    table = dict(shapi.DEFAULT_RULES)
+    table.update(shparams.PARAM_LOGICAL_EXTRA)
+    table.update(ARCH_RULES.get(arch, {}))
+    table.update(KIND_RULES.get(kind, {}))
+    table.update(extra or {})
+    return shapi.ShardingRules(table)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    memory: dict | None = None
+    roofline: dict | None = None
+
+
+def _mesh(name: str):
+    return mesh_lib.make_production_mesh(multi_pod=(name == "multi"))
+
+
+def _param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def _opt_structs(p_struct):
+    return {
+        "mu": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_struct),
+        "nu": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_struct),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def zero1(spec_tree, p_struct, mesh, rules):
+    """ZeRO-1: additionally shard optimizer moments over the DP axes on the
+    first free, divisible dimension."""
+    dp = rules.table.get("batch")
+    axes = dp if isinstance(dp, tuple) else (dp,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    dp_size = 1
+    for a in axes:
+        dp_size *= mesh.shape[a]
+
+    def one(spec, struct):
+        parts = list(spec) + [None] * (len(struct.shape) - len(spec))
+        used = set()
+        for p in parts:
+            if p is not None:
+                used.update(p if isinstance(p, tuple) else (p,))
+        free = tuple(a for a in axes if a not in used)
+        if free:
+            size = 1
+            for a in free:
+                size *= mesh.shape[a]
+            for i, (dim, cur) in enumerate(zip(struct.shape, parts)):
+                if cur is None and dim % size == 0 and dim >= size:
+                    parts[i] = free if len(free) > 1 else free[0]
+                    break
+        from jax.sharding import PartitionSpec as P
+        return P(*parts)
+
+    return jax.tree.map(one, spec_tree, p_struct)
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str, *,
+               scan_layers: bool = False, zero1_opt: bool = True,
+               extra_rules: dict | None = None, local_impl: str = "mask",
+               opt_level: int = 0, attn_qchunk: int = 0, remat: bool = True,
+               return_artifacts: bool = False, cfg: ModelConfig | None = None):
+    cfg = cfg if cfg is not None else configs.get_config(arch)
+    if opt_level or attn_qchunk or not remat:
+        cfg = dataclasses.replace(cfg, opt_level=opt_level,
+                                  attn_qchunk=attn_qchunk, remat=remat)
+    shape = configs.SHAPES[shape_name]
+    mesh = _mesh(mesh_name)
+    rules = rules_for(arch, shape.kind, extra_rules)
+    n_chips = mesh.devices.size
+    from jax.sharding import NamedSharding
+
+    with shapi.use_mesh(mesh, rules):
+        p_struct = _param_structs(cfg)
+        p_specs = shparams.physical_specs(p_struct, mesh, rules)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+
+        if shape.kind == "train":
+            o_struct = _opt_structs(p_struct)
+            o_specs = {
+                "mu": zero1(p_specs, p_struct, mesh, rules) if zero1_opt
+                else p_specs,
+                "nu": zero1(p_specs, p_struct, mesh, rules) if zero1_opt
+                else p_specs,
+                "step": jax.sharding.PartitionSpec(),
+            }
+            o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs["mu"])
+            o_sh = {"mu": o_sh, "nu": o_sh,
+                    "step": NamedSharding(mesh, jax.sharding.PartitionSpec())}
+            b_specs = specs_lib.train_like_specs(cfg, shape)
+            b_sh = specs_lib.train_like_shardings(cfg, b_specs, mesh, rules)
+            step = make_train_step(cfg, adamw.AdamWConfig(),
+                                   scan_layers=scan_layers,
+                                   local_impl=local_impl)
+            err = None
+            fn = lambda p, o, b: step(p, o, b, None)[:3]
+            jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_struct, o_struct, b_specs)
+            model_flops = roofline_lib.model_flops_train(
+                cfg, shape.global_batch * shape.seq_len)  # 6ND: fwd+bwd
+        elif shape.kind == "prefill":
+            b_specs = specs_lib.train_like_specs(cfg, shape)
+            b_sh = specs_lib.train_like_shardings(cfg, b_specs, mesh, rules)
+            prefill = make_prefill_step(cfg, scan_layers=scan_layers,
+                                        local_impl=local_impl)
+            jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_struct, b_specs)
+            model_flops = roofline_lib.model_flops_prefill(
+                cfg, shape.global_batch * shape.seq_len)
+        else:  # decode
+            tok, pos, state, memory = specs_lib.decode_state_specs(cfg, shape)
+            tok_sh, pos_sh, st_sh, mem_sh = specs_lib.decode_shardings(
+                cfg, shape, mesh, rules)
+
+            def serve_step(params, tokens, position, st, mem):
+                logits, new_state = decode_step(params, tokens, position, st,
+                                                cfg, memory=mem)
+                return jnp.argmax(logits, -1).astype(jnp.int32), new_state
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_sh, tok_sh, pos_sh, st_sh,
+                                           mem_sh),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(p_struct, tok, pos, state, memory)
+            model_flops = roofline_lib.model_flops_decode(
+                cfg, shape.global_batch)
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    memory = {
+        "argument_size": ma.argument_size_in_bytes,
+        "output_size": ma.output_size_in_bytes,
+        "temp_size": ma.temp_size_in_bytes,
+        "generated_code_size": ma.generated_code_size_in_bytes,
+        "per_chip_total": (ma.argument_size_in_bytes
+                           + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes),
+    }
+    rf = roofline_lib.analyze(compiled, arch=arch, shape=shape_name,
+                              mesh_name=mesh_name, n_chips=n_chips,
+                              model_flops=model_flops)
+    if return_artifacts:
+        return compiled, memory, rf
+    return memory, rf
+
+
+def lower_cell_extrapolated(arch: str, shape_name: str, mesh_name: str,
+                            **kw):
+    """Two-point unrolled extrapolation for very deep configs.
+
+    Compile the full-width model at 1 and 2 pattern-groups (unrolled, fast),
+    take the per-group delta of every roofline term, and extrapolate
+    linearly to the full depth:  X(G) = X(1) + (G-1)·(X(2)-X(1)).
+    Exact for parameter/optimizer terms and per-layer collectives (both are
+    strictly linear in depth); activations/temp extrapolate linearly in the
+    saved-residual component with the constant per-group working set
+    captured in the base point.  Methodology recorded in EXPERIMENTS.md.
+    """
+    cfg_full = configs.get_config(arch)
+    gs = cfg_full.group_size
+    g_full = cfg_full.num_layers / gs
+    pts = []
+    for g in (1, 2):
+        cfg_g = dataclasses.replace(cfg_full, num_layers=g * gs)
+        mem, rf = lower_cell(arch, shape_name, mesh_name, cfg=cfg_g, **kw)
+        pts.append((mem, rf))
+    (m1, r1), (m2, r2) = pts
+    lerp = lambda a, b: a + (g_full - 1) * (b - a)
+    memory = {k: lerp(m1[k], m2[k]) for k in m1}
+    coll = {k: lerp(r1.coll_breakdown.get(k, 0.0),
+                    r2.coll_breakdown.get(k, 0.0))
+            for k in set(r1.coll_breakdown) | set(r2.coll_breakdown)}
+    model_flops = (roofline_lib.model_flops_train(
+        cfg_full, configs.SHAPES[shape_name].global_batch
+        * configs.SHAPES[shape_name].seq_len)
+        if configs.SHAPES[shape_name].kind == "train"
+        else roofline_lib.model_flops_prefill(
+            cfg_full, configs.SHAPES[shape_name].global_batch
+            * configs.SHAPES[shape_name].seq_len)
+        if configs.SHAPES[shape_name].kind == "prefill"
+        else roofline_lib.model_flops_decode(
+            cfg_full, configs.SHAPES[shape_name].global_batch))
+    rf = roofline_lib.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name + "*",
+        flops_per_chip=lerp(r1.flops_per_chip, r2.flops_per_chip),
+        bytes_per_chip=lerp(r1.bytes_per_chip, r2.bytes_per_chip),
+        coll_bytes_per_chip=coll.get("total", 0.0),
+        coll_breakdown=coll,
+        t_compute=lerp(r1.t_compute, r2.t_compute),
+        t_memory=lerp(r1.t_memory, r2.t_memory),
+        t_collective=lerp(r1.t_collective, r2.t_collective),
+        model_flops=model_flops,
+        peak_mem_bytes=lerp(r1.peak_mem_bytes, r2.peak_mem_bytes),
+        n_chips=r1.n_chips,
+    )
+    return memory, rf
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             method: str = "direct", **kw) -> CellResult:
+    t0 = time.time()
+    try:
+        if method == "extrapolate":
+            memory, rf = lower_cell_extrapolated(arch, shape_name, mesh_name,
+                                                 **kw)
+        else:
+            memory, rf = lower_cell(arch, shape_name, mesh_name, **kw)
+        return CellResult(arch, shape_name, mesh_name, True,
+                          time.time() - t0, memory=memory,
+                          roofline=rf.to_dict())
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        return CellResult(arch, shape_name, mesh_name, False,
+                          time.time() - t0,
+                          error=f"{type(e).__name__}: {e}\n"
+                          + traceback.format_exc(limit=8))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--scan-layers", action="store_true")
+    ap.add_argument("--local-impl", default="mask",
+                    choices=["mask", "chunked"])
+    ap.add_argument("--rules", default="",
+                    help="logical=phys overrides, comma separated "
+                         "(e.g. seq=model,cache_seq=None)")
+    ap.add_argument("--opt-level", type=int, default=0)
+    ap.add_argument("--attn-qchunk", type=int, default=0)
+    ap.add_argument("--method", default="auto",
+                    choices=["auto", "direct", "extrapolate"],
+                    help="auto: direct unrolled compile for small archs, "
+                         "two-point extrapolation for very deep ones; "
+                         "multi-pod always compiles the full graph "
+                         "(scan-layers build) as the shardability proof")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    extra = {}
+    for kv in args.rules.split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=")
+        extra[k] = None if v in ("None", "none", "") else (
+            tuple(v.split("+")) if "+" in v else v)
+
+    archs = [args.arch] if args.arch else configs.ARCHS
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    heavy = {"qwen3-32b", "grok-1-314b", "arctic-480b"}
+    results = []
+    for arch in archs:
+        shapes = [args.shape] if args.shape else configs.applicable_shapes(
+            arch)
+        for shape in shapes:
+            for mesh_name in meshes:
+                if args.method == "auto":
+                    if mesh_name == "multi":
+                        method, scan = "direct", True
+                    elif arch in heavy:
+                        method, scan = "extrapolate", False
+                    else:
+                        method, scan = "direct", False
+                else:
+                    method, scan = args.method, args.scan_layers
+                r = run_cell(arch, shape, mesh_name, method=method,
+                             scan_layers=scan, opt_level=args.opt_level,
+                             attn_qchunk=args.attn_qchunk,
+                             extra_rules=extra, local_impl=args.local_impl)
+                results.append(r)
+                status = "OK " if r.ok else "FAIL"
+                mem = (f"{r.memory['per_chip_total'] / 2**30:.2f} GiB/chip"
+                       if r.memory else "-")
+                print(f"[{status}] {arch:22s} {shape:12s} {mesh_name:6s} "
+                      f"{r.seconds:7.1f}s  {mem}", flush=True)
+                if not r.ok:
+                    print(r.error, file=sys.stderr, flush=True)
+                tag = f"{arch}_{shape}_{mesh_name}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(dataclasses.asdict(r), f, indent=2)
+    nfail = sum(not r.ok for r in results)
+    print(f"\n{len(results) - nfail}/{len(results)} cells compiled")
+    rows = [roofline_lib.Roofline(**{k: v for k, v in r.roofline.items()
+                                     if k in {f.name for f in
+                                              dataclasses.fields(
+                                                  roofline_lib.Roofline)}})
+            for r in results if r.ok]
+    print(roofline_lib.render_table(rows))
+    return 1 if nfail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns (specs, shardings, step_kind):
+  * train / prefill: {"tokens": (B,S) i32, "frontend": ... when stubbed}
+  * decode: (tokens (B,), pos (B,), decode state pytree, [memory])
+
+No device memory is allocated — decode states come from ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import cross_memory, init_decode_state
+from repro.models.common import ModelConfig
+from repro.sharding.api import ShardingRules
+
+ENC_MEMORY_LEN = 1024   # stub encoder-memory length for enc-dec decode
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_like_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.enc_layers:
+        # enc-dec: half the length budget to frames, half to text tokens
+        specs["frontend"] = _sd((b, s // 2, cfg.frontend_dim), jnp.float32)
+        specs["tokens"] = _sd((b, s // 2), jnp.int32)
+    elif cfg.frontend_dim:
+        specs["frontend"] = _sd((b, cfg.num_prefix, cfg.frontend_dim),
+                                jnp.float32)
+        specs["tokens"] = _sd((b, s - cfg.num_prefix), jnp.int32)
+    else:
+        specs["tokens"] = _sd((b, s), jnp.int32)
+    return specs
+
+
+def train_like_shardings(cfg: ModelConfig, specs: dict, mesh,
+                         rules: ShardingRules) -> dict:
+    from repro.sharding.api import filter_spec
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, filter_spec(v.shape,
+                                                 rules.spec(*axes), mesh))
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b = shape.global_batch
+    cache_len = shape.seq_len
+    state = jax.eval_shape(lambda: init_decode_state(cfg, b, cache_len))
+    tokens = _sd((b,), jnp.int32)
+    pos = _sd((b,), jnp.int32)
+    memory = None
+    if cfg.enc_layers:
+        memory = (_sd((b, ENC_MEMORY_LEN, cfg.d_model), cfg.compute_dtype),
+                  _sd((b, ENC_MEMORY_LEN), jnp.int32))
+    return tokens, pos, state, memory
+
+
+def _state_logical_axes(path) -> tuple:
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    leaf = names[-1]
+    if leaf in ("k", "v"):
+        return ("batch", "cache_seq", "kv_heads", "head_dim")
+    if leaf == "s":                       # rwkv state (B,NH,hd,hd)
+        return ("batch", "rwkv_heads", None, None)
+    if leaf == "h":                       # rglru state (B,R)
+        return ("batch", "lru")
+    if leaf == "conv":                    # (B,W-1,R)
+        return ("batch", None, "lru")
+    if leaf in ("prev", "cmix_prev"):     # (B,1,D)
+        return ("batch", None, "embed")
+    return ("batch",)
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     rules: ShardingRules):
+    tokens, pos, state, memory = decode_state_specs(cfg, shape)
+
+    def bind(path, leaf):
+        axes = _state_logical_axes(path)
+        axes = tuple(axes) + (None,) * (len(leaf.shape) - len(axes))
+        spec = _filtered(leaf, axes[: len(leaf.shape)], mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    from repro.sharding.api import filter_spec
+    state_sh = jax.tree_util.tree_map_with_path(bind, state)
+    tok_sh = NamedSharding(mesh, filter_spec(tokens.shape,
+                                             rules.spec("batch"), mesh))
+    mem_sh = None
+    if memory is not None:
+        mem_sh = (NamedSharding(mesh, filter_spec(
+                      memory[0].shape, rules.spec("batch", None, "embed"),
+                      mesh)),
+                  NamedSharding(mesh, filter_spec(
+                      memory[1].shape, rules.spec("batch", None), mesh)))
+    return tok_sh, tok_sh, state_sh, mem_sh
+
+
+def _filtered(leaf, axes, mesh, rules: ShardingRules) -> P:
+    from repro.sharding.api import filter_entry
+    spec = []
+    used: set = set()
+    for dim, name in zip(leaf.shape, axes):
+        phys = rules.table.get(name) if name else None
+        spec.append(filter_entry(dim, phys, mesh, used))
+    return P(*spec)

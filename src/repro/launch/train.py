@@ -1,0 +1,76 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--tiny]``.
+
+Host-scale runs (this container) use the tiny config; the full configs are
+exercised via the dry-run.  ``--resume`` restores the latest checkpoint;
+``--restarts N`` wraps the loop in crash-restart (ft/monitor).  The GAPP
+profile is printed at the end of every run — the profiler is on by default,
+as in the paper ("works out of the box").
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.ft.monitor import run_with_restarts
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build_trainer(arch: str, *, tiny: bool = True, steps: int = 50,
+                  batch: int = 8, seq: int = 128, ckpt_dir: str | None = None,
+                  loader_delay_s: float = 0.0, profile: bool = True,
+                  compress: str = "none") -> Trainer:
+    cfg = configs.get_tiny(arch) if tiny else configs.get_config(arch)
+    tcfg = TrainerConfig(
+        steps=steps, batch_per_host=batch, seq_len=seq,
+        ckpt_dir=ckpt_dir or f"/tmp/repro_ckpt_{arch}",
+        ckpt_every=max(steps // 2, 1), profile=profile,
+        loader_delay_s=loader_delay_s)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
+    import jax
+    from repro.train.step import make_train_step
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, compress=compress),
+                      donate_argnums=(0, 1))
+    return Trainer(cfg, opt_cfg, tcfg, step_fn=step_fn)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b", choices=configs.ARCHS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (expect host-scale OOM; dry-run "
+                         "is the full-size path)")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--restarts", type=int, default=0)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--loader-delay", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    trainer = build_trainer(args.arch, tiny=not args.full, steps=args.steps,
+                            batch=args.batch, seq=args.seq,
+                            loader_delay_s=args.loader_delay,
+                            compress=args.compress)
+
+    def attempt(start_step: int) -> int:
+        trainer.run(start_step=None if (start_step == 0 and not args.resume)
+                    else -1)
+        return trainer.tcfg.steps
+
+    if args.restarts:
+        run_with_restarts(attempt, max_restarts=args.restarts)
+    else:
+        attempt(0)
+
+    if trainer.gapp is not None:
+        from repro.core.report import render_text
+        print(render_text(trainer.profile_report(), max_paths=5))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

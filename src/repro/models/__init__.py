@@ -1,0 +1,11 @@
+"""Model substrate: composable blocks covering all assigned families."""
+from repro.models.common import ModelConfig
+from repro.models import attention, blocks, moe, recurrent, transformer
+from repro.models.transformer import (cross_memory, decode_step, forward,
+                                      init_decode_state, init_lm, lm_loss)
+
+__all__ = [
+    "ModelConfig", "attention", "blocks", "moe", "recurrent", "transformer",
+    "cross_memory", "decode_step", "forward", "init_decode_state", "init_lm",
+    "lm_loss",
+]

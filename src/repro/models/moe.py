@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, sort-based dispatch.
+
+Covers grok-1 (8 experts, top-2) and arctic (128 experts, top-2 **plus** a
+dense residual MLP in parallel).  Expert parallelism: the (E, C, D) expert
+batch is sharded over the ``experts`` logical axis (→ ``model``) when E
+divides the axis; otherwise (grok: E=8 on a 16-way axis) expert weights fall
+back to tensor parallelism over ``expert_mlp`` and the token batch stays
+data-parallel — both bindings are chosen per arch by the launcher rules.
+
+Dispatch is sort-free on the hot path: position-in-expert comes from a
+cumsum over the token-choice one-hot (GShard style), tokens beyond capacity
+are dropped (and counted), and combine is the transpose einsum weighted by
+router probabilities.  An auxiliary load-balance loss (Switch §2.2) is
+returned so training can keep the router healthy — expert imbalance is one
+of the serialization bottlenecks the GAPP profiler is pointed at (a hot
+expert serializes the all-to-all), so the router stats are also exported as
+profiler span-weights by the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.sharding.api import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    pdt = cfg.param_dtype
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "we_gate": dense_init(ks[1], (e, d, f), in_axis=1, dtype=pdt),
+        "we_up": dense_init(ks[2], (e, d, f), in_axis=1, dtype=pdt),
+        "we_down": dense_init(ks[3], (e, f, d), in_axis=1, dtype=pdt),
+    }
+    if cfg.dense_residual:
+        km = jax.random.split(ks[4], 3)
+        p["dense_gate"] = dense_init(km[0], (d, f), dtype=pdt)
+        p["dense_up"] = dense_init(km[1], (d, f), dtype=pdt)
+        p["dense_down"] = dense_init(km[2], (f, d), dtype=pdt)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * tokens_per_group
+            / max(cfg.num_experts, 1))
+    return max(4, -(-c // 4) * 4)            # round up to a multiple of 4
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D), aux metrics dict.
+
+    Groups are batch rows (B groups of S tokens): routing, capacity and the
+    dispatch/combine einsums are per-group, so the batch dim stays on the DP
+    axes and the expert dim carries the EP all-to-all.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cdt = cfg.compute_dtype
+    cap = _capacity(cfg, s)
+
+    logits = x.astype(jnp.float32) @ p["router"]          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                # (B,S,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # position-in-expert via cumsum over the flattened (S*k) choice sequence,
+    # k-th choices ranked after all (k-1)-th choices (GShard ordering).
+    choice_eh = jax.nn.one_hot(top_e, e, dtype=jnp.int32)  # (B,S,k,E)
+    flat = choice_eh.transpose(0, 2, 1, 3).reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                     # (B,S*k,E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(b, k, s).transpose(0, 2, 1)
+    keep = pos < cap                                       # (B,S,k)
+    dropped = jnp.sum(~keep)
+
+    # dispatch: (B,S,k) scatter -> (B,E,C,D)
+    def dispatch_one(xg, eg, posg, keepg):                 # per batch row
+        out = jnp.zeros((e, cap, d), cdt)
+        idx_e = eg.reshape(-1)
+        idx_c = jnp.where(keepg, posg, cap).reshape(-1).astype(jnp.int32)
+        src = jnp.repeat(xg[:, None], k, axis=1).reshape(-1, d).astype(cdt)
+        return out.at[idx_e, jnp.minimum(idx_c, cap - 1)].add(
+            src * keepg.reshape(-1, 1))
+
+    expert_in = jax.vmap(dispatch_one)(x, top_e, pos, keep)  # (B,E,C,D)
+    expert_in = constrain(expert_in, "batch", "experts_act", None, "embed")
+
+    # expert FFN (SwiGLU), E sharded (EP) or F sharded (TP fallback)
+    wg = p["we_gate"].astype(cdt)
+    wu = p["we_up"].astype(cdt)
+    wd = p["we_down"].astype(cdt)
+    if cfg.opt_level >= 1:
+        # pin the bf16 copies to the weights' own sharding so any gather at
+        # the einsum moves bf16, not the f32 master (cast-then-gather)
+        wg = constrain(wg, "experts", "expert_in", "expert_mlp")
+        wu = constrain(wu, "experts", "expert_in", "expert_mlp")
+        wd = constrain(wd, "experts", "expert_mlp", "expert_in")
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, wg)) \
+        * jnp.einsum("becd,edf->becf", expert_in, wu)
+    h = constrain(h, "batch", "experts_act", None, "expert_mlp")
+    expert_out = jnp.einsum("becf,efd->becd", h, wd)
+    expert_out = constrain(expert_out, "batch", "experts_act", None, "embed")
+
+    # combine: gather back with router weights
+    def combine_one(yg, eg, posg, keepg, pg):
+        src = yg[eg.reshape(-1), jnp.where(keepg, posg, 0).reshape(-1)
+                 .astype(jnp.int32)]
+        src = src * (keepg.reshape(-1, 1) * pg.reshape(-1, 1)).astype(cdt)
+        return jnp.sum(src.reshape(s, k, d), axis=1)
+
+    y = jax.vmap(combine_one)(expert_out, top_e, pos, keep, top_p)
+    y = constrain(y, "batch", "seq", "embed")
+
+    if cfg.dense_residual:
+        hd_ = jax.nn.silu(x @ p["dense_gate"].astype(cdt)) \
+            * (x @ p["dense_up"].astype(cdt))
+        hd_ = constrain(hd_, "batch", "seq", "mlp")
+        y = y + hd_ @ p["dense_down"].astype(cdt)
+
+    # Switch-style load-balance auxiliary loss + routing stats
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "aux_loss": cfg.router_aux_weight * e
+        * jnp.sum(frac_tokens * frac_probs),
+        "expert_load": jnp.sum(
+            jnp.sum(choice_eh, axis=2).reshape(-1, e), axis=0),
+        "dropped": dropped,
+    }
+    return y, aux

@@ -1,0 +1,338 @@
+"""Recurrent temporal-mix blocks: RG-LRU (recurrentgemma) and RWKV-6.
+
+Both are linear recurrences ``h_t = a_t ⊙ h_{t-1} + b_t`` with
+data-dependent decay.  TPU adaptation: no token-level while-loops — the
+RG-LRU uses ``jax.lax.associative_scan`` over the sequence, and RWKV-6 uses
+the chunked form (intra-chunk matmuls on the MXU + an associative scan over
+per-chunk state summaries).  This keeps the HLO loop-free, which matters for
+two reasons: XLA overlaps/pipelines straight-line code far better than a
+524288-trip while loop, and ``cost_analysis`` on a while body would not
+multiply by the trip count, which would corrupt the roofline accounting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm
+from repro.sharding.api import constrain
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+
+_C = 8.0  # the paper's fixed scaling constant
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, r, w = cfg.d_model, cfg.lru, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    pdt = cfg.param_dtype
+    return {
+        "wx": dense_init(ks[0], (d, r), dtype=pdt),      # recurrence branch
+        "wy": dense_init(ks[1], (d, r), dtype=pdt),      # gate branch
+        "conv_w": dense_init(ks[2], (w, r), dtype=pdt),
+        "conv_b": jnp.zeros((r,), pdt),
+        # per-channel (diagonal) gates, as in the BlockDiagonalLinear of the
+        # reference implementation collapsed to its diagonal
+        "gate_a_w": dense_init(ks[3], (r,), dtype=pdt),
+        "gate_a_b": jnp.zeros((r,), pdt),
+        "gate_x_w": dense_init(ks[4], (r,), dtype=pdt),
+        "gate_x_b": jnp.zeros((r,), pdt),
+        # Λ parametrised so that a = exp(-C softplus(Λ)·sigmoid(r_t))
+        "log_lambda": jnp.asarray(
+            jnp.linspace(0.1, 0.9, r), pdt),
+        "wo": dense_init(ks[5], (r, d), dtype=pdt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S: x (B,S,R), w (W,R)."""
+    width = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        shifted = jnp.pad(x, ((0, 0), (width - 1 - i, 0), (0, 0)))[
+            :, : x.shape[1]]
+        out = out + shifted * w[i]
+    return out + b
+
+
+def _rglru_scan(a, b):
+    """h_t = a_t ⊙ h_{t-1} + b_t via associative scan over S (axis=1)."""
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (a, b), axis=1)
+
+
+def _rglru_gates(p, u, cfg: ModelConfig):
+    f32 = jnp.float32
+    r_t = jax.nn.sigmoid(u.astype(f32) * p["gate_a_w"].astype(f32)
+                         + p["gate_a_b"].astype(f32))
+    i_t = jax.nn.sigmoid(u.astype(f32) * p["gate_x_w"].astype(f32)
+                         + p["gate_x_b"].astype(f32))
+    log_a = -_C * jax.nn.softplus(p["log_lambda"].astype(f32)) * r_t
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_t * u.astype(f32))
+    return a, gated
+
+
+def rglru_block(p, x, cfg: ModelConfig, state=None):
+    """Full-sequence RG-LRU temporal mix.  x: (B,S,D) -> (B,S,D).
+
+    ``state``: optional (B,R) initial hidden state (chained prefill); the
+    final state is returned for decode handoff."""
+    cdt = cfg.compute_dtype
+    y = jax.nn.gelu(x @ p["wy"].astype(cdt))
+    u = x @ p["wx"].astype(cdt)
+    u = _causal_conv(u, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+    u = constrain(u, "batch", "seq", "lru")
+    a, gated = _rglru_gates(p, u, cfg)
+    if state is not None:
+        # fold the carried state in as a virtual step-0 contribution
+        gated = gated.at[:, 0].add(a[:, 0] * state.astype(jnp.float32))
+    _, h = _rglru_scan(a, gated)
+    h = constrain(h.astype(cdt), "batch", "seq", "lru")
+    out = (h * y) @ p["wo"].astype(cdt)
+    return constrain(out, "batch", "seq", "embed"), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(p, x, state, cfg: ModelConfig):
+    """One-token decode: x (B,1,D), state {'h': (B,R), 'conv': (B,W-1,R)}."""
+    cdt = cfg.compute_dtype
+    y = jax.nn.gelu(x @ p["wy"].astype(cdt))
+    u = x @ p["wx"].astype(cdt)
+    hist = jnp.concatenate([state["conv"], u], axis=1)       # (B,W,R)
+    w = p["conv_w"].astype(cdt)
+    u = jnp.einsum("bwr,wr->br", hist, w)[:, None] + p["conv_b"].astype(cdt)
+    a, gated = _rglru_gates(p, u, cfg)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    out = (h[:, None].astype(cdt) * y) @ p["wo"].astype(cdt)
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    return {"h": jnp.zeros((batch, cfg.lru), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru),
+                              cfg.compute_dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch" (arXiv:2404.05892) — data-dependent decay time mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv_tmix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 8)
+    pdt = cfg.param_dtype
+    return {
+        "mix_r": jnp.full((d,), 0.5, pdt), "mix_k": jnp.full((d,), 0.5, pdt),
+        "mix_v": jnp.full((d,), 0.5, pdt), "mix_w": jnp.full((d,), 0.5, pdt),
+        "mix_g": jnp.full((d,), 0.5, pdt),
+        "wr": dense_init(ks[0], (d, d), dtype=pdt),
+        "wk": dense_init(ks[1], (d, d), dtype=pdt),
+        "wv": dense_init(ks[2], (d, d), dtype=pdt),
+        "wg": dense_init(ks[3], (d, d), dtype=pdt),
+        # data-dependent decay: w_t = exp(-exp(ω + tanh(x W1) W2))
+        "decay_base": jnp.full((d,), -6.0, pdt),
+        "decay_w1": dense_init(ks[4], (d, 64), dtype=pdt),
+        "decay_w2": dense_init(ks[5], (64, d), dtype=pdt),
+        "bonus_u": dense_init(ks[6], (nh, cfg.rwkv_head_dim), dtype=pdt),
+        "ln_x": jnp.zeros((d,), pdt),
+        "wo": dense_init(ks[7], (d, d), dtype=pdt),
+    }
+
+
+def _token_shift(x, prev):
+    """x_{t-1} stream; ``prev`` (B,1,D) is the carried last token (decode/
+    chained prefill) or zeros."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_project(p, x, prev, cfg: ModelConfig):
+    cdt = cfg.compute_dtype
+    xs = _token_shift(x, prev)
+    mix = lambda m: x + (xs - x) * m.astype(cdt)
+    r = mix(p["mix_r"]) @ p["wr"].astype(cdt)
+    k = mix(p["mix_k"]) @ p["wk"].astype(cdt)
+    v = mix(p["mix_v"]) @ p["wv"].astype(cdt)
+    g = mix(p["mix_g"]) @ p["wg"].astype(cdt)
+    dx = mix(p["mix_w"]).astype(jnp.float32)
+    logw = -jnp.exp(p["decay_base"].astype(jnp.float32)
+                    + jnp.tanh(dx @ p["decay_w1"].astype(jnp.float32))
+                    @ p["decay_w2"].astype(jnp.float32))      # (B,S,D) ≤ 0
+    return r, k, v, g, logw
+
+
+def _heads(x, nh, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, nh, hd)
+
+
+def rwkv_tmix(p, x, cfg: ModelConfig, state=None):
+    """Chunked RWKV-6 time mix.  x: (B,S,D) -> (B,S,D).
+
+    Per chunk of length c: intra-chunk attention-like matmuls with decay
+    weights (exact, fp32 exponents masked to i ≤ t so they never overflow),
+    inter-chunk via an associative scan over per-chunk (decay-product,
+    state-update) summaries.  state: optional {'s': (B,NH,hd,hd),
+    'prev': (B,1,D)} carried across calls."""
+    b, s, d = x.shape
+    c = min(cfg.chunk_size, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    nh = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    prev = state["prev"] if state is not None else jnp.zeros(
+        (b, 1, d), x.dtype)
+    s0 = state["s"] if state is not None else jnp.zeros(
+        (b, nh, hd, hd), jnp.float32)
+
+    r, k, v, g, logw = _rwkv_project(p, x, prev, cfg)
+    f32 = jnp.float32
+    rh = _heads(r, nh, hd).astype(f32).reshape(b, nc, c, nh, hd)
+    kh = _heads(k, nh, hd).astype(f32).reshape(b, nc, c, nh, hd)
+    vh = _heads(v, nh, hd).astype(f32).reshape(b, nc, c, nh, hd)
+    lw = logw.reshape(b, nc, c, nh, hd)
+    if cfg.opt_level >= 1:
+        # pin the chunked tensors to (batch=dp, heads=tp): without this the
+        # partitioner replicates the O(B·S·D) f32 intermediates over 'model'
+        hx = lambda t: constrain(t, "batch", None, None, "rwkv_heads", None)
+        rh, kh, vh, lw = hx(rh), hx(kh), hx(vh), hx(lw)
+
+    lsum = jnp.cumsum(lw, axis=2)                   # L_t inclusive, ≤ 0, ↓
+    ltot = lsum[:, :, -1]                           # (B,nc,NH,hd)
+    lprev = lsum - lw                               # L_{t-1} (exclusive)
+    # ----- intra-chunk: o_t += Σ_{i<t} (r_t · e^{L_{t-1}-L_i} ⊙ k_i) v_i.
+    # The decay weight is per-channel, so A cannot be one matmul; we tile the
+    # chunk into sub-chunks of m and assemble A block-wise.  Off-diagonal
+    # blocks (key sub-chunk strictly earlier) factor EXACTLY through the key
+    # sub-chunk's boundary decay M: e^{L_{t-1}-L_i} = e^{L_{t-1}-M}·e^{M-L_i}
+    # with both exponents ≤ 0 (L is non-increasing) — no overflow, no
+    # approximation.  Diagonal blocks materialise the (m,m,hd) exponent with
+    # the i<t mask applied before exp (argument ≤ 0, equally safe).
+    m = min(16, c)
+    nsc = c // m
+    shp = (b, nc, nsc, m, nh, hd)
+    rs, ks_, vs = rh.reshape(shp), kh.reshape(shp), vh.reshape(shp)
+    lps, lss = lprev.reshape(shp), lsum.reshape(shp)
+    mbound = lss[:, :, :, -1]                       # (B,nc,nsc,NH,hd)
+    tri_m = jnp.tril(jnp.ones((m, m), bool), k=-1)[None, None, :, :, None,
+                                                   None]
+    blocks = []
+    for ti in range(nsc):
+        row = []
+        for si in range(nsc):
+            if si > ti:
+                row.append(jnp.zeros((b, nc, nh, m, m), f32))
+            elif si == ti:
+                diff = lps[:, :, ti, :, None] - lss[:, :, si, None, :]
+                w_pair = jnp.where(tri_m, jnp.exp(jnp.minimum(diff, 0.0)),
+                                   0.0)
+                row.append(jnp.einsum(
+                    "btihd,bihd->bhti",
+                    (w_pair * rs[:, :, ti, :, None]).reshape(
+                        b * nc, m, m, nh, hd),
+                    ks_[:, :, si].reshape(b * nc, m, nh, hd),
+                ).reshape(b, nc, nh, m, m))
+            else:
+                mb = mbound[:, :, si]               # (B,nc,NH,hd)
+                qt = rs[:, :, ti] * jnp.exp(lps[:, :, ti] - mb[:, :, None])
+                kt = ks_[:, :, si] * jnp.exp(mb[:, :, None] - lss[:, :, si])
+                row.append(jnp.einsum("bnthd,bnihd->bnhti", qt, kt))
+        blocks.append(jnp.concatenate(row, axis=-1))
+    att = jnp.concatenate(blocks, axis=-2)          # (B,nc,NH,c,c)
+    if cfg.opt_level >= 1:
+        att = constrain(att, "batch", None, "rwkv_heads", None, None)
+    # bonus (u) diagonal term: i == t
+    bonus = jnp.einsum("bnthd,bnthd->bnht", rh * p["bonus_u"].astype(f32),
+                       kh)
+    intra = jnp.einsum("bnhti,bnihd->bnthd", att, vh) \
+        + bonus.transpose(0, 1, 3, 2)[..., None] * vh
+    # ----- inter-chunk: per-chunk state summary then associative scan
+    # chunk update: S_end = e^{ltot} ⊙_rows S_start + Σ_i e^{ltot-L_i} k_i v_iᵀ
+    kdec = kh * jnp.exp(ltot[:, :, None] - lsum)    # (B,nc,c,NH,hd)
+    upd = jnp.einsum("bnchk,bnchv->bnhkv", kdec,
+                     vh)                            # (B,nc,NH,hd,hd)
+    adec = jnp.exp(ltot)                            # (B,nc,NH,hd)
+
+    def combine(left, right):
+        a1, u1 = left
+        a2, u2 = right
+        return a1 * a2, a2[..., None] * u1 + u2
+
+    a_pfx, u_pfx = jax.lax.associative_scan(combine, (adec, upd), axis=1)
+    # state at the *start* of each chunk (exclusive prefix, seeded with s0)
+    s_starts = jnp.concatenate([
+        s0[:, None],
+        a_pfx[:, :-1, :, :, None] * s0[:, None] + u_pfx[:, :-1]], axis=1)
+    rdec = rh * jnp.exp(lprev)                      # r̃_t = r_t e^{L_{t-1}}
+    inter = jnp.einsum("bnchk,bnhkv->bnchv", rdec, s_starts)
+    o = (intra + inter).reshape(b, s, nh, hd)
+    s_final = a_pfx[:, -1, :, :, None] * s0 + u_pfx[:, -1]
+    # group norm per head + gate
+    o = rms_norm(o, p["ln_x"].reshape(nh, hd)).reshape(b, s, d)
+    out = (o.astype(cfg.compute_dtype) * jax.nn.silu(g)) \
+        @ p["wo"].astype(cfg.compute_dtype)
+    out = constrain(out, "batch", "seq", "embed")
+    return out, {"s": s_final, "prev": x[:, -1:]}
+
+
+def rwkv_tmix_step(p, x, state, cfg: ModelConfig):
+    """One-token decode.  x: (B,1,D)."""
+    b, _, d = x.shape
+    nh = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    r, k, v, g, logw = _rwkv_project(p, x, state["prev"], cfg)
+    f32 = jnp.float32
+    rh = _heads(r, nh, hd)[:, 0].astype(f32)
+    kh = _heads(k, nh, hd)[:, 0].astype(f32)
+    vh = _heads(v, nh, hd)[:, 0].astype(f32)
+    w = jnp.exp(logw[:, 0].reshape(b, nh, hd))
+    s_prev = state["s"]
+    kv = kh[..., :, None] * vh[..., None, :]          # (B,NH,hd,hd)
+    o = jnp.einsum("bhk,bhkv->bhv", rh,
+                   s_prev + p["bonus_u"].astype(f32)[..., None] * kv)
+    s_new = w[..., None] * s_prev + kv
+    o = rms_norm(o, p["ln_x"].reshape(nh, hd)).reshape(b, 1, d)
+    out = (o.astype(cfg.compute_dtype) * jax.nn.silu(g)) \
+        @ p["wo"].astype(cfg.compute_dtype)
+    return out, {"s": s_new, "prev": x}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    nh = d // cfg.rwkv_head_dim
+    return {"s": jnp.zeros((batch, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                           jnp.float32),
+            "prev": jnp.zeros((batch, 1, d), cfg.compute_dtype)}
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    pdt = cfg.param_dtype
+    return {
+        "mix_k": jnp.full((d,), 0.5, pdt),
+        "mix_r": jnp.full((d,), 0.5, pdt),
+        "wk": dense_init(ks[0], (d, f), dtype=pdt),
+        "wv": dense_init(ks[1], (f, d), dtype=pdt),
+        "wr": dense_init(jax.random.fold_in(key, 7), (d, d), dtype=pdt),
+    }
+
+
+def rwkv_cmix(p, x, cfg: ModelConfig, prev=None):
+    """Channel mix (the RWKV FFN) with token shift."""
+    cdt = cfg.compute_dtype
+    prev = prev if prev is not None else jnp.zeros_like(x[:, :1])
+    xs = _token_shift(x, prev)
+    mix = lambda m: x + (xs - x) * m.astype(cdt)
+    k = jnp.square(jax.nn.relu(mix(p["mix_k"]) @ p["wk"].astype(cdt)))
+    k = constrain(k, "batch", "seq", "mlp")
+    r = jax.nn.sigmoid(mix(p["mix_r"]) @ p["wr"].astype(cdt))
+    out = r * (k @ p["wv"].astype(cdt))
+    return constrain(out, "batch", "seq", "embed"), x[:, -1:]

@@ -1,0 +1,2 @@
+"""Optimizers: AdamW + gradient compression (error feedback)."""
+from repro.optim import adamw, compression  # noqa: F401

@@ -1,0 +1,96 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+At multi-pod scale the data-parallel gradient all-reduce crosses the
+inter-pod links (the slowest hop).  Two standard compressors:
+
+* ``int8``  — per-tensor symmetric quantisation: 4× fewer bytes on the wire;
+  the quantisation residual is carried in an error-feedback buffer so the
+  scheme stays unbiased over time (Seide et al. / EF-SGD).
+* ``topk``  — keep the largest-|g| fraction per tensor (sparsification),
+  remainder into the error buffer.
+
+``wrap_grad_fn`` composes either around any grad function with error
+feedback.  Honesty note on the SPMD path: under ``jax.jit`` the partitioner
+places the DP gradient reduction inside the backward pass, *before* the
+wrapper runs — so in the pjit train step the compressor preserves the
+algorithmic semantics (quantised gradients + error feedback, convergence
+verified in tests) but does not shrink the wire bytes.  Realising the wire
+saving needs the reduction under explicit control (shard_map the grad
+aggregation, quantise per shard, psum the int8/scale pairs) — the
+``topk``/int8 kernels here are reduction-placement agnostic and reusable
+for that; tracked as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x):
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g, frac: float):
+    k = max(1, int(g.size * frac))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_topk(grads, err, frac: float = 0.05):
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        m = topk_mask(g, frac)
+        return g * m, g * (1 - m)
+    pairs = [(one(g, e)) for g, e in zip(jax.tree.leaves(grads),
+                                         jax.tree.leaves(err))]
+    treedef = jax.tree.structure(grads)
+    sel = lambda i: jax.tree.unflatten(treedef, [p[i] for p in pairs])
+    return sel(0), sel(1)
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wrap_grad_fn(grad_fn: Callable, mode: str = "none",
+                 topk_frac: float = 0.05) -> Callable:
+    """grad_fn(params, batch) -> (grads, aux).  Returns a function
+    f(params, batch, err) -> (grads, aux, new_err) applying compression +
+    error feedback around the gradient computation."""
+    if mode == "none":
+        def f_none(params, batch, err):
+            g, aux = grad_fn(params, batch)
+            return g, aux, err
+        return f_none
+    if mode == "int8":
+        def f_int8(params, batch, err):
+            g, aux = grad_fn(params, batch)
+            flat_g, treedef = jax.tree.flatten(g)
+            flat_e = treedef.flatten_up_to(err)
+            outs = []
+            for gi, ei in zip(flat_g, flat_e):
+                gi = gi.astype(jnp.float32) + ei
+                q, s = _quant_int8(gi)
+                outs.append((_dequant_int8(q, s), gi - _dequant_int8(q, s)))
+            g2 = treedef.unflatten([o[0] for o in outs])
+            e2 = treedef.unflatten([o[1] for o in outs])
+            return g2, aux, e2
+        return f_int8
+    if mode == "topk":
+        def f_topk(params, batch, err):
+            g, aux = grad_fn(params, batch)
+            g2, e2 = compress_topk(g, err, topk_frac)
+            return g2, aux, e2
+        return f_topk
+    raise ValueError(mode)

@@ -1,0 +1,2 @@
+"""Pipeline parallelism (GPipe via shard_map + ppermute)."""
+from repro.pipeline.gpipe import gpipe, schedule_intervals  # noqa: F401

@@ -1,0 +1,2 @@
+"""Serving: prefill/decode steps, engine, flash-decode."""
+from repro.serve.engine import Engine, Request, make_decode_step, make_prefill_step  # noqa: F401

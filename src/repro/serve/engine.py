@@ -1,0 +1,108 @@
+"""Serving: prefill and decode step builders + a minimal batched engine.
+
+``make_prefill_step`` runs the full-sequence forward and returns last-token
+logits; ``make_decode_step`` advances one token against the decode state
+(KV caches / recurrent states).  Cache layout under the production mesh:
+batch on the DP axes and cache sequence on the model axis (sequence-sharded
+flash-decode — see DESIGN.md §5), falling back to head sharding when the
+rules say so.
+
+The :class:`Engine` drives continuous batched decoding on the host and is
+GAPP-instrumented: each request slot is a logical worker, so stalls from
+uneven sequence lengths (a serialization bottleneck: one long request holds
+the whole batch) surface directly in the CMetric profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cross_memory, decode_step, forward, init_decode_state
+from repro.models.common import ModelConfig
+from repro.sharding.api import constrain
+
+
+def make_prefill_step(cfg: ModelConfig, **fw_kwargs) -> Callable:
+    def prefill(params, batch):
+        logits, _ = forward(params, batch, cfg, **fw_kwargs)
+        return logits[:, -1]
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, tokens, pos, state, memory=None):
+        logits, state = decode_step(params, tokens, pos, state, cfg,
+                                    memory=memory)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, state
+    return step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """Small continuous-batching decode engine (host loop, CPU-friendly)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 cache_len: int, gapp=None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.cache_len = cache_len
+        self.state = init_decode_state(cfg, batch_slots, cache_len)
+        self.tokens = jnp.zeros((batch_slots,), jnp.int32)
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.active: list[Request | None] = [None] * batch_slots
+        self._step = jax.jit(make_decode_step(cfg))
+        self.gapp = gapp
+        if gapp is not None:
+            self.slot_wids = [gapp.register_worker(f"slot{i}", "device")
+                              for i in range(batch_slots)]
+
+    def submit(self, req: Request) -> bool:
+        for i in range(self.slots):
+            if self.active[i] is None:
+                self.active[i] = req
+                self.tokens = self.tokens.at[i].set(int(req.prompt[-1]))
+                self.pos = self.pos.at[i].set(len(req.prompt) - 1)
+                if self.gapp is not None:
+                    self.gapp.begin(self.slot_wids[i], f"decode/req{req.rid}")
+                return True
+        return False
+
+    def step(self) -> list[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        next_tok, _, self.state = self._step(self.params, self.tokens,
+                                             self.pos, self.state)
+        self.tokens = next_tok
+        self.pos = self.pos + 1
+        done = []
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(next_tok[i]))
+            if len(req.out) >= req.max_new:
+                done.append(req)
+                self.active[i] = None
+                if self.gapp is not None:
+                    self.gapp.end(self.slot_wids[i])
+        return done
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        finished: list[Request] = []
+        while pending or any(r is not None for r in self.active):
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            finished += self.step()
+        return finished

@@ -1,0 +1,119 @@
+"""Parameter partition rules: param-tree paths -> logical axes -> mesh.
+
+Rules are matched on (parent-key, leaf-key) pairs, first match wins.  Axes
+whose physical size doesn't divide the dimension are dropped (e.g. grok's
+8-expert axis on a 16-way model axis falls back to replication, with the
+launcher instead binding ``expert_mlp`` for tensor-parallel experts).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import ShardingRules
+
+# ((parent regex, leaf regex), logical axes per dim)
+_RULES: list[tuple[tuple[str, str], tuple] ] = [
+    ((r".*", r"embed"), ("vocab", "embed")),
+    ((r".*", r"lm_head"), ("embed", "vocab")),
+    ((r".*", r"(enc_)?frontend"), (None, "embed")),
+    # attention (parent attn/xattn)
+    ((r"attn|xattn", r"wq"), ("embed", "heads_flat")),
+    ((r"attn|xattn", r"w[kv]"), ("embed", "kv_flat")),
+    ((r"attn|xattn", r"bq"), ("heads_flat",)),
+    ((r"attn|xattn", r"b[kv]"), ("kv_flat",)),
+    ((r"attn|xattn", r"wo"), ("heads_flat", "embed")),
+    ((r"attn|xattn", r"[qk]_norm"), (None,)),
+    # MoE (parent ffn)
+    ((r"ffn", r"router"), ("embed", "experts")),
+    ((r"ffn", r"we_(gate|up)"), ("experts", "expert_in", "expert_mlp")),
+    ((r"ffn", r"we_down"), ("experts", "expert_mlp", "expert_in")),
+    ((r"ffn", r"dense_(gate|up)"), ("embed", "mlp")),
+    ((r"ffn", r"dense_down"), ("mlp", "embed")),
+    # dense MLP (parent ffn)
+    ((r"ffn", r"(gate|up)"), ("embed", "mlp")),
+    ((r"ffn", r"down"), ("mlp", "embed")),
+    # RG-LRU (parent mix)
+    ((r"mix", r"w[xy]"), ("embed", "lru")),
+    ((r"mix", r"conv_w"), (None, "lru")),
+    ((r"mix", r"(conv_b|gate_.*|log_lambda)"), ("lru",)),
+    # RWKV time mix (parent mix)
+    ((r"mix", r"w[rkvg]"), ("embed", "heads_flat")),
+    ((r"mix", r"decay_w1"), ("embed", None)),
+    ((r"mix", r"decay_w2"), (None, "heads_flat")),
+    ((r"mix", r"bonus_u"), ("rwkv_heads", None)),
+    ((r"mix", r"(mix_.*|decay_base|ln_x)"), (None,)),
+    ((r"mix", r"wo"), ("heads_flat", "embed")),
+    # RWKV channel mix (parent ffn)
+    ((r"ffn", r"w[k]"), ("embed", "mlp")),
+    ((r"ffn", r"wv"), ("mlp", "embed")),
+    ((r"ffn", r"wr"), ("embed", None)),
+    ((r"ffn", r"mix_.*"), (None,)),
+]
+
+PARAM_LOGICAL_EXTRA = {
+    "heads_flat": "model",
+    "kv_flat": "model",
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _match(path_names: list[str]) -> tuple | None:
+    leaf = path_names[-1]
+    parents = path_names[:-1]
+    for (pp, lp), axes in _RULES:
+        if not re.fullmatch(lp, leaf):
+            continue
+        if pp == r".*" or any(re.fullmatch(pp, p) for p in parents):
+            return axes
+    return None
+
+
+def logical_param_specs(shapes, cfg=None):
+    """Pytree of logical-axis tuples matching a params(-shape) pytree."""
+    def one(path, leaf):
+        names = _path_names(path)
+        axes = _match(names)
+        if axes is None:
+            return (None,) * len(leaf.shape)
+        axes = tuple(axes) + (None,) * (len(leaf.shape) - len(axes))
+        return axes[: len(leaf.shape)]
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def physical_specs(shapes, mesh: Mesh, rules: ShardingRules):
+    """Pytree of PartitionSpec with divisibility filtering."""
+    table = dict(rules.table)
+    table.update({k: v for k, v in PARAM_LOGICAL_EXTRA.items()
+                  if k not in table})
+    logical = logical_param_specs(shapes)
+
+    from repro.sharding.api import filter_entry
+
+    def bind(leaf_shape, axes):
+        spec = []
+        used: set = set()
+        for dim, name in zip(leaf_shape.shape, axes):
+            phys = table.get(name) if name else None
+            spec.append(filter_entry(dim, phys, mesh, used))
+        return P(*spec)
+
+    return jax.tree.map(bind, shapes, logical)
+
+
+def param_shardings(shapes, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        physical_specs(shapes, mesh, rules))

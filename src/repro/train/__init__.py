@@ -1,0 +1,2 @@
+"""Training: step builders + instrumented trainer loop."""
+from repro.train.step import make_eval_step, make_train_step  # noqa: F401

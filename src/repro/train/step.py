@@ -1,0 +1,79 @@
+"""Train / eval step builders (pjit-able, sharding-annotated).
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch, err) -> (params, opt_state, metrics, err)``
+ready for ``jax.jit`` with the shardings produced by
+``repro.sharding.params`` — the same function serves the CPU smoke tests
+(no mesh binding) and the 512-chip dry-run (bound via ``use_mesh``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_loss
+from repro.models.common import ModelConfig
+from repro.optim import adamw, compression
+from repro.sharding.api import constrain
+
+
+def make_loss_fn(cfg: ModelConfig, **fw_kwargs) -> Callable:
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, **fw_kwargs)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    compress: str = "none", microbatch: int | None = None,
+                    **fw_kwargs) -> Callable:
+    """Builds the jittable step.  ``microbatch`` splits the per-step batch
+    into gradient-accumulation chunks (sequential, remat-friendly)."""
+    loss_fn = make_loss_fn(cfg, **fw_kwargs)
+
+    def grad_fn(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, {**metrics, "loss": loss}
+
+    cgrad = compression.wrap_grad_fn(grad_fn, compress)
+
+    def train_step(params, opt_state, batch, err):
+        batch = {k: constrain(v, "batch") for k, v in batch.items()}
+        if microbatch and microbatch > 1:
+            def mb_body(carry, mb):
+                acc, aux_acc = carry
+                g, aux = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                aux_acc = jax.tree.map(jnp.add, aux_acc,
+                                       {"loss": aux["loss"]})
+                return (acc, aux_acc), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                    + x.shape[1:]), batch)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+            (grads, aux_sum), _ = jax.lax.scan(
+                mb_body, (zero_g, {"loss": jnp.zeros((), jnp.float32)}), mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = {"loss": aux_sum["loss"] / microbatch}
+            new_err = err
+        else:
+            grads, metrics, new_err = cgrad(params, batch, err)
+            metrics = {"loss": metrics["loss"]}
+        params, opt_state, opt_metrics = adamw.update(opt_cfg, grads,
+                                                      opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics}, new_err
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, **fw_kwargs) -> Callable:
+    loss_fn = make_loss_fn(cfg, **fw_kwargs)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `import repro` work regardless of PYTHONPATH.
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))

@@ -1,0 +1,81 @@
+"""Assigned-config fidelity: exact values from the assignment table."""
+import pytest
+
+from repro import configs
+
+
+EXPECTED = {
+    "deepseek-7b": dict(num_layers=30, d_model=4096, num_heads=32,
+                        num_kv_heads=32, d_ff=11008, vocab_size=102400),
+    "qwen1.5-4b": dict(num_layers=40, d_model=2560, num_heads=20,
+                       num_kv_heads=20, d_ff=6912, vocab_size=151936,
+                       qkv_bias=True),
+    "qwen3-32b": dict(num_layers=64, d_model=5120, num_heads=64,
+                      num_kv_heads=8, d_ff=25600, vocab_size=151936,
+                      qk_norm=True),
+    "gemma3-1b": dict(num_layers=26, d_model=1152, num_heads=4,
+                      num_kv_heads=1, d_ff=6912, vocab_size=262144),
+    "recurrentgemma-2b": dict(num_layers=26, d_model=2560, num_heads=10,
+                              num_kv_heads=1, d_ff=7680, vocab_size=256000),
+    "seamless-m4t-large-v2": dict(num_layers=24, d_model=1024, num_heads=16,
+                                  num_kv_heads=16, d_ff=8192,
+                                  vocab_size=256206, enc_layers=24),
+    "internvl2-2b": dict(num_layers=24, d_model=2048, num_heads=16,
+                         num_kv_heads=8, d_ff=8192, vocab_size=92553),
+    "grok-1-314b": dict(num_layers=64, d_model=6144, num_heads=48,
+                        num_kv_heads=8, d_ff=32768, vocab_size=131072,
+                        num_experts=8, top_k=2),
+    "arctic-480b": dict(num_layers=35, d_model=7168, num_heads=56,
+                        num_kv_heads=8, d_ff=4864, vocab_size=32000,
+                        num_experts=128, top_k=2, dense_residual=True),
+    "rwkv6-1.6b": dict(num_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536),
+}
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_exact_config_values(arch):
+    cfg = configs.get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_gemma3_pattern_5to1():
+    cfg = configs.get_config("gemma3-1b")
+    assert cfg.block_pattern == ("local",) * 5 + ("dense",)
+    assert cfg.num_groups == 4 and cfg.tail_pattern == ("local", "local")
+
+
+def test_recurrentgemma_pattern_1to2():
+    cfg = configs.get_config("recurrentgemma-2b")
+    assert cfg.block_pattern == ("rglru", "rglru", "local")
+    assert cfg.num_groups == 8 and cfg.tail_pattern == ("rglru", "rglru")
+
+
+def test_grid_and_skips():
+    cells = configs.grid()
+    assert len(cells) == 33  # 10*4 minus 7 long_500k full-attention skips
+    assert ("deepseek-7b", "long_500k") not in cells
+    assert ("rwkv6-1.6b", "long_500k") in cells
+    assert ("gemma3-1b", "long_500k") in cells
+    assert ("recurrentgemma-2b", "long_500k") in cells
+
+
+def test_shapes_table():
+    s = configs.SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524288 and s["long_500k"].global_batch == 1
+
+
+def test_param_counts_full_configs():
+    """Full-size analytic param counts near the published sizes."""
+    approx = {
+        "deepseek-7b": 7e9, "qwen1.5-4b": 4e9, "qwen3-32b": 32e9,
+        "gemma3-1b": 1e9, "recurrentgemma-2b": 2.7e9,
+        "grok-1-314b": 314e9, "arctic-480b": 480e9, "rwkv6-1.6b": 1.6e9,
+    }
+    for arch, target in approx.items():
+        n = configs.get_config(arch).param_count()
+        assert 0.5 * target < n < 1.8 * target, (arch, n, target)

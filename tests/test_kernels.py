@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compute, compute_numpy, synthetic_log
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("e", [1, 7, 128, 255, 256, 1000, 5000])
+@pytest.mark.parametrize("block", [128, 512, 2048])
+def test_fold_shapes(e, block):
+    rng = np.random.default_rng(e + block)
+    # random alternating-ish stream (not necessarily well-formed; the fold
+    # itself only needs deltas)
+    deltas = rng.choice([-1, 1], size=e).astype(np.int32)
+    # keep count non-negative like a real stream
+    deltas = np.abs(deltas) * (np.cumsum(deltas) > -5) * deltas
+    t = np.sort(rng.random(e)).astype(np.float32)
+    dt = np.concatenate([np.diff(t), [0.0]]).astype(np.float32)
+    n_r, g_r, tot_r, idle_r = ref.fold_ref(jnp.asarray(dt),
+                                           jnp.asarray(deltas))
+    n_k, g_k, tot_k, idle_k = ops.cmetric_fold(jnp.asarray(t),
+                                               jnp.asarray(deltas),
+                                               block=block)
+    np.testing.assert_array_equal(np.asarray(n_r), np.asarray(n_k))
+    np.testing.assert_allclose(np.asarray(g_r), np.asarray(g_k), rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(float(tot_r), float(tot_k), rtol=1e-5)
+    np.testing.assert_allclose(float(idle_r), float(idle_k), rtol=1e-5,
+                               atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 40), st.integers(0, 10_000))
+def test_pallas_backend_matches_numpy(num_workers, slices, seed):
+    rng = np.random.default_rng(seed)
+    log = synthetic_log(rng, num_workers, slices)
+    a = compute_numpy(log)
+    b = compute(log, backend="pallas")
+    np.testing.assert_allclose(a.per_worker, b.per_worker, rtol=1e-4,
+                               atol=1e-6)
+    assert a.num_slices == b.num_slices
+
+
+@pytest.mark.parametrize("s,k", [(1, 4), (100, 17), (1024, 128),
+                                 (5000, 1000), (333, 64)])
+def test_hist_shapes(s, k):
+    rng = np.random.default_rng(s * k)
+    tags = jnp.asarray(rng.integers(-2, k, size=s), jnp.int32)
+    w = jnp.asarray(rng.random(s), jnp.float32)
+    c_r = ref.hist_ref(tags, k)
+    w_r = ref.weighted_hist_ref(tags, w, k)
+    c_k, w_k = ops.tag_histogram(tags, w, num_bins=k, block=256)
+    np.testing.assert_array_equal(np.asarray(c_r), np.asarray(c_k))
+    np.testing.assert_allclose(np.asarray(w_r), np.asarray(w_k), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_hist_default_weights():
+    tags = jnp.asarray([0, 1, 1, 2, -1, 2, 2], jnp.int32)
+    c, w = ops.tag_histogram(tags, num_bins=3)
+    np.testing.assert_array_equal(np.asarray(c), [1, 2, 3])
+    np.testing.assert_allclose(np.asarray(w), [1, 2, 3])
+
+
+def test_fold_large_stream_blocked_equals_unblocked():
+    rng = np.random.default_rng(0)
+    log = synthetic_log(rng, 32, 500)   # 32k events
+    t = jnp.asarray(log.slice_seconds(), jnp.float32)
+    d = jnp.asarray(log.deltas, jnp.int32)
+    outs = [ops.cmetric_fold(t, d, block=b) for b in (256, 4096)]
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-7)

@@ -1,0 +1,28 @@
+"""Report rendering + JSON export."""
+import json
+
+import numpy as np
+
+from repro.core import detect, imbalance_stats, render_text, to_json
+from tests.test_detector import _bottleneck_trace
+
+
+def test_render_and_json_roundtrip():
+    tr, clk, w = _bottleneck_trace()
+    rep = detect(tr, None)
+    text = render_text(rep)
+    assert "GAPP bottleneck profile" in text
+    assert "io_phase" in text and "critical slices" in text
+    d = json.loads(to_json(rep))
+    assert d["total_critical"] == 8
+    assert d["paths"][0]["path"] == "io_phase"
+    assert abs(d["paths"][0]["cmetric_s"] - 0.04) < 1e-9
+
+
+def test_imbalance_stats():
+    s = imbalance_stats(np.array([1.0, 1.0, 1.0, 5.0]))
+    assert s["argmax"] == 3
+    assert s["max_over_mean"] == 2.5
+    assert s["cv"] > 0.8
+    z = imbalance_stats(np.zeros(4))
+    assert z["cv"] == 0.0 and z["max_over_mean"] == 0.0

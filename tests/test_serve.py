@@ -1,0 +1,45 @@
+"""Serving: prefill -> decode continuation equals full-sequence forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (decode_step, forward, init_decode_state, init_lm)
+from repro.serve.engine import make_prefill_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "gemma3-1b"])
+def test_prefill_then_decode_continues(arch):
+    """Prefill the first T tokens by teacher-forced decode, then greedy
+    decode; the logits at position T must match the full forward at T."""
+    cfg = configs.get_tiny(arch)
+    cfg = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    params = init_lm(KEY, cfg)
+    B, T = 2, 6
+    tokens = jax.random.randint(KEY, (B, T + 1), 0, cfg.vocab_size)
+    state = init_decode_state(cfg, B, 16)
+    for t in range(T):
+        lg, state = decode_step(params, tokens[:, t],
+                                jnp.full((B,), t, jnp.int32), state, cfg)
+    lg_T, _ = decode_step(params, tokens[:, T],
+                          jnp.full((B,), T, jnp.int32), state, cfg)
+    full, _ = forward(params, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(np.asarray(lg_T), np.asarray(full[:, T]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_step_last_token_logits():
+    cfg = configs.get_tiny("qwen3-32b")
+    cfg = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    params = init_lm(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)}
+    prefill = make_prefill_step(cfg)
+    last = prefill(params, batch)
+    full, _ = forward(params, batch, cfg)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)

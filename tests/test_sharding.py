@@ -1,0 +1,90 @@
+"""Sharding rules: logical->physical binding, divisibility filtering,
+param-tree rule coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import init_lm
+from repro.sharding import api as shapi
+from repro.sharding import params as shparams
+
+
+def _mesh22():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_filter_entry_drops_missing_axes():
+    mesh = _mesh22()
+    assert shapi.filter_entry(8, ("pod", "data"), mesh) == "data"
+    assert shapi.filter_entry(8, "pod", mesh) is None
+    assert shapi.filter_entry(8, "model", mesh) == "model"
+
+
+def test_filter_entry_divisibility():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2) \
+        if len(jax.devices()) >= 8 else None
+    if mesh is None:
+        pytest.skip("needs 8 devices (covered by subprocess tests)")
+
+
+def test_rules_spec_and_replace():
+    rules = shapi.default_rules(seq="model")
+    assert rules.spec("batch", "seq") == P(("pod", "data"), "model")
+    rules2 = rules.replace(seq=None)
+    assert rules2.spec("batch", "seq") == P(("pod", "data"), None)
+    assert rules.spec("batch", "seq") == P(("pod", "data"), "model")
+
+
+def test_constrain_noop_outside_binding():
+    x = jnp.zeros((4, 4))
+    y = shapi.constrain(x, "batch", "embed")
+    assert y is x
+
+
+def test_param_rules_cover_every_leaf():
+    """Every param leaf in every arch matches a rule or is a norm/scalar
+    (replicated by default) — no silent misses on matrices."""
+    for arch in configs.ARCHS:
+        cfg = configs.get_tiny(arch)
+        shapes = jax.eval_shape(lambda c=cfg: init_lm(jax.random.PRNGKey(0),
+                                                      c))
+        logical = shparams.logical_param_specs(shapes)
+        flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        flat_l = jax.tree.leaves(logical, is_leaf=lambda x: isinstance(
+            x, tuple))
+        assert len(flat_s) == len(flat_l)
+        for (path, leaf), axes in zip(flat_s, flat_l):
+            names = shparams._path_names(path)
+            # any matrix of rank >=2 that is not a norm/gate should have at
+            # least one sharded axis in its logical spec
+            big = int(np.prod(leaf.shape)) >= 64 * 64 and len(leaf.shape) >= 2
+            if big and all(a is None for a in axes):
+                raise AssertionError(
+                    f"{arch}: unsharded big leaf {'/'.join(names)} "
+                    f"{leaf.shape}")
+
+
+def test_physical_specs_on_trivial_mesh():
+    cfg = configs.get_tiny("deepseek-7b")
+    shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    mesh = _mesh22()
+    specs = shparams.physical_specs(shapes, mesh, shapi.default_rules())
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in flat)
+
+
+def test_constrain_inside_binding_applies():
+    mesh = _mesh22()
+    with shapi.use_mesh(mesh, shapi.default_rules()):
+        assert shapi.axis_size("heads") == 1
+
+        @jax.jit
+        def f(x):
+            return shapi.constrain(x, "batch", "mlp")
+        y = f(jnp.zeros((4, 8)))
+        assert y.shape == (4, 8)

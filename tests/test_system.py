@@ -1,0 +1,130 @@
+"""End-to-end behaviour: train loop (loss drops, profile produced, resume
+from checkpoint), serving engine, roofline HLO accounting."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp, steps=8, **kw):
+    cfg = configs.get_tiny("deepseek-7b")
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=steps)
+    tcfg = TrainerConfig(steps=steps, batch_per_host=4, seq_len=32,
+                         ckpt_dir=str(tmp), ckpt_every=4, log_every=100,
+                         **kw)
+    return Trainer(cfg, opt_cfg, tcfg)
+
+
+def test_train_e2e_loss_drops_and_profiles(tmp_path):
+    tr = _trainer(tmp_path, steps=10)
+    tr.run()
+    losses = [h["loss"] for h in tr.history]
+    assert len(losses) == 10
+    assert losses[-1] < losses[0]
+    rep = tr.profile_report()
+    assert rep.total_slices > 0
+    assert "trainer" in rep.worker_names and "data_loader" in rep.worker_names
+    # checkpoints were written
+    from repro.ckpt import checkpoint
+    assert checkpoint.latest_step(str(tmp_path)) == 10
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    tr = _trainer(tmp_path, steps=4)
+    tr.run()
+    from repro.ckpt import checkpoint
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+    tr2 = _trainer(tmp_path, steps=6)
+    params, opt, step = tr2.restore_or_init()
+    assert step == 4
+    tr2.loader.stop()
+    tr.loader.stop()
+    # restored tree matches saved tree
+    saved = checkpoint.restore(str(tmp_path), 4,
+                               {"params": params, "opt": opt})
+    for a, b in zip(jax.tree.leaves(saved["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slow_loader_detected(tmp_path):
+    tr = _trainer(tmp_path, steps=6, loader_delay_s=0.05)
+    tr.run()
+    rep = tr.profile_report()
+    names = [rep.path_str(p) for p in rep.paths[:3]]
+    assert any("wait_data" in n or "data/generate" in n for n in names), names
+
+
+def test_serve_engine_e2e():
+    from repro.models import init_lm
+    from repro.serve.engine import Engine, Request
+    cfg = configs.get_tiny("gemma3-1b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, params, batch_slots=4, cache_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=3),
+                    max_new=5 + i) for i in range(6)]
+    done = engine.run(reqs)
+    assert len(done) == 6
+    assert all(len(r.out) == 5 + r.rid for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
+
+
+def test_roofline_collective_parsing():
+    from repro.launch import roofline
+    hlo = """
+  %all-gather = bf16[64,1024]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+  %all-reduce.1 = f32[128]{0} all-reduce(%x), replica_groups=[1,256]<=[256], to_apply=%add
+  %fusion = f32[2,2] fusion(%all-reduce.1)
+  %collective-permute = bf16[8,8]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  ROOT %t = (f32[4]{0}, f32[4]{0}) all-to-all(%a, %b), replica_groups=[64,4]<=[256]
+"""
+    out = roofline.collective_bytes(hlo)
+    ag = 64 * 1024 * 2 * (15 / 16)
+    ar = 128 * 4 * 2 * (255 / 256)
+    cp = 8 * 8 * 2 * 1.0
+    a2a = 2 * 4 * 4 * (3 / 4)
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["collective-permute"] == pytest.approx(cp)
+    assert out["all-to-all"] == pytest.approx(a2a)
+    assert out["total"] == pytest.approx(ag + ar + cp + a2a)
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.launch.roofline import Roofline
+    r = Roofline(arch="x", shape="train_4k", mesh="single",
+                 flops_per_chip=1.97e14, bytes_per_chip=819e9 * 2,
+                 coll_bytes_per_chip=50e9 * 0.5, coll_breakdown={},
+                 t_compute=1.0, t_memory=2.0, t_collective=0.5,
+                 model_flops=1.97e14 * 256 * 0.7, peak_mem_bytes=8e9,
+                 n_chips=256)
+    assert r.bottleneck == "memory"
+    assert r.t_bound == 2.0
+    assert r.useful_ratio == pytest.approx(0.7)
+    assert r.roofline_fraction == pytest.approx(0.35)
+
+
+def test_rules_and_specs_cover_all_cells():
+    """Every (arch × shape) cell produces well-formed specs (no compile)."""
+    from repro.launch import specs as specs_lib
+    from repro.launch.dryrun import rules_for
+    for arch, shape_name in configs.grid():
+        cfg = configs.get_config(arch)
+        shape = configs.SHAPES[shape_name]
+        rules = rules_for(arch, shape.kind)
+        assert rules.table["cache_seq"] == ("model" if shape.kind == "decode"
+                                            else None)
+        if shape.kind in ("train", "prefill"):
+            sp = specs_lib.train_like_specs(cfg, shape)
+            assert sp["tokens"].shape[0] == shape.global_batch
+        else:
+            tok, pos, state, mem = specs_lib.decode_state_specs(cfg, shape)
+            assert tok.shape == (shape.global_batch,)
+            assert len(jax.tree.leaves(state)) > 0

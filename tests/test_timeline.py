@@ -1,0 +1,23 @@
+"""Chrome-trace export."""
+import json
+
+from repro.core.timeline import dump_chrome_trace, to_chrome_trace
+from tests.test_detector import _bottleneck_trace
+
+
+def test_chrome_trace_roundtrip(tmp_path):
+    tr, clk, w = _bottleneck_trace()
+    path = str(tmp_path / "trace.json")
+    dump_chrome_trace(tr, path)
+    d = json.load(open(path))
+    evs = d["traceEvents"]
+    spans = [e for e in evs if e.get("ph") == "X" and e["pid"] == 0]
+    crits = [e for e in evs if e.get("ph") == "X" and e["pid"] == 1]
+    names = [e for e in evs if e.get("ph") == "M"]
+    assert len(spans) == 24              # every completed slice
+    assert len(crits) == 8               # the critical overlay
+    assert any(n["args"]["name"] == "w2" for n in names
+               if n["name"] == "thread_name")
+    assert all(e["dur"] >= 0 for e in spans)
+    top = max(crits, key=lambda e: e["args"]["cmetric_ms"])
+    assert abs(top["args"]["cmetric_ms"] - 5.0) < 1e-6

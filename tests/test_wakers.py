@@ -1,0 +1,58 @@
+"""Waker analysis + bottleneck classification (paper §7 extensions)."""
+import numpy as np
+import pytest
+
+from repro.core import (Tracer, classify_report, classify_tag,
+                        critical_wakers, detect, waker_edges)
+from tests.test_tracer import FakeClock
+
+
+def _lock_trace():
+    """w0 holds a 'lock': w1/w2 activate immediately after w0 deactivates."""
+    clk = FakeClock()
+    tr = Tracer(n_min=2.5, clock=clk)
+    w = [tr.register_worker(f"w{i}") for i in range(3)]
+    for rep in range(6):
+        tr.begin(w[0], "hold_lock")
+        clk.advance(3_000_000)
+        tr.end(w[0])
+        clk.advance(1_000)                  # wake-up latency < eps
+        tr.begin(w[1], "critical_section")
+        tr.begin(w[2], "critical_section")
+        clk.advance(1_000_000)
+        tr.end(w[1])
+        tr.end(w[2])
+        clk.advance(500_000)
+    return tr
+
+
+def test_waker_edges_found():
+    tr = _lock_trace()
+    log = tr.freeze()
+    edges = waker_edges(log, eps_ns=10_000)
+    pairs = {(e.waker, e.woken): e.count for e in edges}
+    assert pairs.get((0, 1)) == 6
+    assert pairs.get((0, 2)) == 6
+    # w1/w2 never wake w0 within eps (w0 reactivates 500us later)
+    assert (1, 0) not in pairs and (2, 0) not in pairs
+
+
+def test_critical_waker_ranking():
+    tr = _lock_trace()
+    ranked = critical_wakers(tr.freeze())
+    assert ranked and ranked[0][0] == 0
+    assert ranked[0][1] > 0
+
+
+def test_classification():
+    assert classify_tag("train/wait_data") == "data"
+    assert classify_tag("ckpt/save") == "checkpoint"
+    assert classify_tag("moe/all_to_all") == "collective"
+    assert classify_tag("decode/req3") == "serve"
+    assert classify_tag("train/step") == "compute"
+    assert classify_tag("mystery") == "other"
+    tr = _lock_trace()
+    rep = detect(tr, None)
+    classes = classify_report(rep)
+    assert sum(classes.values()) == pytest.approx(
+        sum(p.cmetric for p in rep.paths))
