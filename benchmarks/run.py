@@ -15,11 +15,45 @@ with '#').  Mapping to the paper:
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
 
+def smoke_detect(n_slices: int, out: str) -> dict:
+    """CI smoke target: the detection-stage scaling benchmark on a synthetic
+    10^5-critical-slice table, persisted as JSON so successive PRs leave a
+    perf trajectory (``python -m benchmarks.run --smoke detect``)."""
+    from benchmarks import bench_detect
+    res = bench_detect.run_scale(n_slices)
+    res["n_slices_requested"] = n_slices
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# detection stage @ {res['n_critical']} critical slices: "
+          f"seed loop {res['seed_loop_s'] * 1e3:.1f} ms, columnar "
+          f"{res['table_s'] * 1e3:.1f} ms "
+          f"({res['speedup']:.1f}x) -> {out}")
+    return res
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", choices=["detect"],
+                    help="run one fast smoke benchmark and write a JSON "
+                         "artifact instead of the full CSV harness")
+    ap.add_argument("--n-slices", type=int, default=250_000,
+                    help="table size for --smoke detect (~43%% of rows land "
+                         "under n_min, so the default yields >=1e5 critical "
+                         "slices)")
+    ap.add_argument("--out", default="BENCH_detect.json",
+                    help="JSON artifact path for --smoke detect")
+    args = ap.parse_args()
+    if args.smoke == "detect":
+        smoke_detect(args.n_slices, args.out)
+        return
+
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,
                             bench_overhead)
     print("# GAPP benchmark harness — paper-table analogues")

@@ -1,23 +1,63 @@
-"""GAPP core: criticality-metric serialization-bottleneck profiler."""
+"""GAPP core: criticality-metric serialization-bottleneck profiler.
+
+Architecture — the offline dataflow is columnar end-to-end::
+
+    EventLog (struct-of-arrays event stream; ``events.py``)
+        │  sanitize()           drop spurious double-ACTIVATE / unmatched
+        │                       DEACTIVATE (the live tracer's §3.2 rules)
+        ▼
+    CMetric backend (``backends.py`` registry: numpy | stream | vector | pallas)
+        │  fold                 interval lengths → active counts → global_cm
+        │                       prefix (Pallas ``cmetric_fold`` on TPU)
+        │  pair + segment-sum   stable sort by worker pairs IN/OUT events;
+        │                       per-slice CMetric = gcm[out] - gcm[in]
+        ▼
+    CMetricResult — thin wrapper over a SliceTable (``slices.py``):
+        aligned columns (worker, start_ns, end_ns, cm, threads_av,
+        stack_id, n_at_exit), one row per completed timeslice
+        │  critical(n_min)      threads_av threshold → CriticalTable
+        ▼
+    Detector (``detector.py``, fully vectorised over the table):
+        sample attachment       one searchsorted per worker group
+        path merge              bincount/segment-sum keyed on stack id
+        tag frequency tables    flat (path, tag) histogram — Pallas
+                                ``tag_hist`` kernel on the fused backend
+        ▼
+    BottleneckReport → render_text / to_json (``report.py``)
+
+The live path (``tracer.py``) maintains the same state online in O(1) per
+event (the paper's eBPF maps) and appends critical slices straight into a
+growable columnar ``CriticalBuffer`` whose ``.table()`` feeds the same
+detector.  Backends register themselves in ``backends.py`` via
+``register_backend(name, fn, capabilities=...)``; ``compute(log, backend=)``
+dispatches by name and new implementations can be plugged in without
+touching the pipeline.
+"""
 from repro.core.events import (ACTIVATE, DEACTIVATE, EventLog, EventRing,
                                synthetic_log)
+from repro.core.slices import (CriticalBuffer, CriticalSlice, CriticalTable,
+                               SliceTable)
+from repro.core.backends import (available_backends, backends_with,
+                                 get_backend, register_backend)
 from repro.core.cmetric import (CMetricResult, compute, compute_numpy,
                                 compute_streaming, compute_vectorized)
-from repro.core.tracer import (CriticalSlice, StackRegistry, TagRegistry,
-                               Tracer)
+from repro.core.tracer import StackRegistry, TagRegistry, Tracer
 from repro.core.sampler import SampleBuffer, SamplingProbe, simulate_samples
 from repro.core.detector import (BottleneckReport, PathProfile, detect,
-                                 detect_offline)
+                                 detect_offline, merge_table)
 from repro.core.report import imbalance_stats, render_text, to_json
 from repro.core.profiler import Gapp, profile_log
 
 __all__ = [
     "ACTIVATE", "DEACTIVATE", "EventLog", "EventRing", "synthetic_log",
+    "SliceTable", "CriticalTable", "CriticalBuffer", "CriticalSlice",
+    "available_backends", "backends_with", "get_backend", "register_backend",
     "CMetricResult", "compute", "compute_numpy", "compute_streaming",
-    "compute_vectorized", "CriticalSlice", "StackRegistry", "TagRegistry",
+    "compute_vectorized", "StackRegistry", "TagRegistry",
     "Tracer", "SampleBuffer", "SamplingProbe", "simulate_samples",
     "BottleneckReport", "PathProfile", "detect", "detect_offline",
-    "imbalance_stats", "render_text", "to_json", "Gapp", "profile_log",
+    "merge_table", "imbalance_stats", "render_text", "to_json", "Gapp",
+    "profile_log",
 ]
 from repro.core.wakers import (classify_report, classify_tag,  # noqa: E402
                                critical_wakers, waker_edges)

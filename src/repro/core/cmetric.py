@@ -11,14 +11,27 @@ trick)::
     cm_hash[w]       += global_cm - local_cm[w]             # on switch-out
     local_cm[w]       = global_cm                           # on switch-in
 
-Three implementations, equivalent up to float tolerance:
+Four implementations, equivalent up to float tolerance, registered in the
+:mod:`repro.core.backends` registry:
 
-* :func:`compute_numpy`    — float64 oracle (reference for everything else).
-* :func:`compute_streaming`— paper-faithful event-at-a-time ``lax.scan``
-  maintaining exactly the eBPF-map state of Table 1.
-* :func:`compute_vectorized` — beyond-paper data-parallel formulation
-  (cumsum + stable-sort pairing + segment-sum), which is what the Pallas
-  fold kernel accelerates.  O(E log E) work but fully parallel.
+* ``numpy``  — :func:`compute_numpy`, float64 oracle (reference for all).
+* ``stream`` — :func:`compute_streaming`, paper-faithful event-at-a-time
+  ``lax.scan`` maintaining exactly the eBPF-map state of Table 1.
+* ``vector`` — :func:`compute_vectorized`, beyond-paper data-parallel
+  formulation (cumsum + stable-sort pairing + segment-sum).  O(E log E)
+  work but fully parallel.
+* ``pallas`` — the vector pipeline with the interval fold swapped for the
+  Pallas ``cmetric_fold`` kernel, fold + pairing + segment-sum fused into a
+  single jitted call (no host round-trip between stages).
+
+All backends emit a :class:`~repro.core.slices.SliceTable`;
+:class:`CMetricResult` is a thin wrapper over it.
+
+Degenerate timeslices (``slice_cm == 0``) fall back to
+``threads_av = max(n_at_exit, 1)`` — the instantaneous active count at
+switch-out, including the exiting worker — in *every* backend (the numpy
+oracle's semantics; the vector/pallas paths used to hardcode 1.0, which
+could flip criticality between backends).
 """
 from __future__ import annotations
 
@@ -29,42 +42,91 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends as backends_lib
+from repro.core.backends import register_backend
 from repro.core.events import ACTIVATE, DEACTIVATE, EventLog
+from repro.core.slices import CriticalTable, SliceTable
 
 
 @dataclasses.dataclass
 class CMetricResult:
-    """Per-worker totals plus per-timeslice records.
+    """Per-worker totals plus the per-timeslice table.
 
-    Slice arrays are aligned and length-S (one entry per completed timeslice,
-    i.e. per DEACTIVATE event).  ``threads_av`` is the harmonic weighted
+    ``table`` holds one row per completed timeslice (one per DEACTIVATE
+    event), in absolute ns on the source log's clock; ``t0_ns`` is the log
+    epoch so the legacy rebased-seconds views (``slice_start`` …) stay
+    available as properties.  ``threads_av`` is the harmonic weighted
     average parallelism ``(end-start)/slice_cm`` (== n when parallelism is
     constant over the slice); the stack-trace trigger is
     ``threads_av < n_min`` (paper §4.2).
     """
 
     per_worker: np.ndarray        # float64[W] cumulative CMetric (cm_hash)
-    slice_worker: np.ndarray      # int32[S]
-    slice_start: np.ndarray       # float64[S] seconds (rebased)
-    slice_end: np.ndarray         # float64[S]
-    slice_cm: np.ndarray          # float64[S]
-    slice_threads_av: np.ndarray  # float64[S]
-    slice_stack: np.ndarray       # int32[S] interned call-path id (or -1)
+    table: SliceTable             # S rows, aligned columns (ns domain)
+    t0_ns: int                    # log epoch for the seconds-domain views
     idle_time: float              # total time with zero active workers
     total_time: float             # t_last - t_first
 
+    # -- legacy rebased-seconds views ---------------------------------------
+    @property
+    def slice_worker(self) -> np.ndarray:
+        return self.table.worker
+
+    @property
+    def slice_start(self) -> np.ndarray:
+        return (self.table.start_ns - self.t0_ns) * 1e-9
+
+    @property
+    def slice_end(self) -> np.ndarray:
+        return (self.table.end_ns - self.t0_ns) * 1e-9
+
+    @property
+    def slice_cm(self) -> np.ndarray:
+        return self.table.cm
+
+    @property
+    def slice_threads_av(self) -> np.ndarray:
+        return self.table.threads_av
+
+    @property
+    def slice_stack(self) -> np.ndarray:
+        return self.table.stack_id
+
     @property
     def num_slices(self) -> int:
-        return int(self.slice_cm.shape[0])
+        return len(self.table)
 
     def critical_mask(self, n_min: float) -> np.ndarray:
-        return self.slice_threads_av < n_min
+        return self.table.threads_av < n_min
+
+    def critical_table(self, n_min: float) -> CriticalTable:
+        return self.table.critical(n_min)
 
 
 def _empty_result(num_workers: int) -> CMetricResult:
-    z = np.zeros((0,))
-    return CMetricResult(np.zeros(num_workers), z.astype(np.int32), z, z, z, z,
-                         z.astype(np.int32), 0.0, 0.0)
+    return CMetricResult(np.zeros(num_workers), SliceTable.empty(), 0, 0.0,
+                         0.0)
+
+
+def _make_result(log: EventLog, per_worker, worker, start_s, end_s, cm,
+                 threads_av, stack, n_at_exit, idle, total) -> CMetricResult:
+    """Assemble a result from rebased-seconds slice columns (backend output
+    domain), converting times back to the log's ns clock."""
+    t0 = int(log.times[0]) if len(log) else 0
+    table = SliceTable.from_arrays(
+        worker=np.asarray(worker, np.int32),
+        start_ns=t0 + np.round(np.asarray(start_s, np.float64)
+                               * 1e9).astype(np.int64),
+        end_ns=t0 + np.round(np.asarray(end_s, np.float64)
+                             * 1e9).astype(np.int64),
+        cm=np.asarray(cm, np.float64),
+        threads_av=np.asarray(threads_av, np.float64),
+        stack_id=np.asarray(stack, np.int32),
+        n_at_exit=np.asarray(n_at_exit, np.int32),
+    )
+    return CMetricResult(per_worker=np.asarray(per_worker, np.float64),
+                         table=table, t0_ns=t0, idle_time=float(idle),
+                         total_time=float(total))
 
 
 # ---------------------------------------------------------------------------
@@ -85,7 +147,7 @@ def compute_numpy(log: EventLog) -> CMetricResult:
     local = np.zeros(log.num_workers)
     start = np.zeros(log.num_workers)
     cm = np.zeros(log.num_workers)
-    sw, ss, se, sc, sa, sk = [], [], [], [], [], []
+    sw, ss, se, sc, sa, sk, sn = [], [], [], [], [], [], []
     t_prev = t[0]
     for i in range(e):
         dt = t[i] - t_prev
@@ -109,18 +171,10 @@ def compute_numpy(log: EventLog) -> CMetricResult:
             sc.append(slice_cm)
             sa.append(dur / slice_cm if slice_cm > 0 else float(max(count, 1)))
             sk.append(int(log.stacks[i]))
+            sn.append(count)                 # n_at_exit: before the decrement
             count -= 1
-    return CMetricResult(
-        per_worker=cm,
-        slice_worker=np.asarray(sw, np.int32),
-        slice_start=np.asarray(ss),
-        slice_end=np.asarray(se),
-        slice_cm=np.asarray(sc),
-        slice_threads_av=np.asarray(sa),
-        slice_stack=np.asarray(sk, np.int32),
-        idle_time=float(idle),
-        total_time=float(t[-1] - t[0]),
-    )
+    return _make_result(log, cm, sw, ss, se, sc, sa, sk, sn, idle,
+                        t[-1] - t[0])
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +202,7 @@ def _streaming_scan(times_s, workers, deltas, num_workers: int):
         threads_av = jnp.where(slice_cm > 0, dur / jnp.maximum(slice_cm, 1e-30),
                                jnp.maximum(count + 1, 1).astype(jnp.float32))
         out = (~is_in, wi, start[wi] * is_in + (t - dur) * (~is_in), t,
-               slice_cm, threads_av)
+               slice_cm, threads_av, count + 1)
         return (gcm, idle, count, t, local, start, cm), out
 
     zero = jnp.zeros((num_workers,), jnp.float32)
@@ -168,20 +222,13 @@ def compute_streaming(log: EventLog) -> CMetricResult:
     cm, idle, outs = _streaming_scan(t, jnp.asarray(log.workers),
                                      jnp.asarray(log.deltas, jnp.int32),
                                      log.num_workers)
-    is_out, wi, s_start, s_end, s_cm, s_av = jax.tree.map(np.asarray, outs)
+    is_out, wi, s_start, s_end, s_cm, s_av, s_n = jax.tree.map(np.asarray,
+                                                               outs)
     m = np.asarray(is_out)
     # slice start from the scan is reconstructed as end - dur for out events
-    return CMetricResult(
-        per_worker=np.asarray(cm, np.float64),
-        slice_worker=np.asarray(wi[m], np.int32),
-        slice_start=np.asarray(s_start[m], np.float64),
-        slice_end=np.asarray(s_end[m], np.float64),
-        slice_cm=np.asarray(s_cm[m], np.float64),
-        slice_threads_av=np.asarray(s_av[m], np.float64),
-        slice_stack=log.stacks[m],
-        idle_time=float(idle),
-        total_time=float(np.asarray(t)[-1] - np.asarray(t)[0]),
-    )
+    tn = np.asarray(t)
+    return _make_result(log, cm, wi[m], s_start[m], s_end[m], s_cm[m],
+                        s_av[m], log.stacks[m], s_n[m], idle, tn[-1] - tn[0])
 
 
 # ---------------------------------------------------------------------------
@@ -204,11 +251,13 @@ def _fold_interval_terms(times_s, deltas):
     return n, contrib, gcm, idle
 
 
-@functools.partial(jax.jit, static_argnames=("num_workers",))
-def _pair_and_aggregate(times_s, workers, deltas, gcm, idle,
-                        num_workers: int):
+def _pair_core(times_s, workers, deltas, gcm, idle, num_workers: int):
     """Pairing + aggregation stage shared by the vectorised and Pallas
-    backends: ``gcm`` is the global_cm prefix (one entry per event)."""
+    backends: ``gcm`` is the global_cm prefix (one entry per event).
+
+    Traceable (un-jitted) so the Pallas backend can fuse it with the fold
+    kernel inside one jit; :func:`compute_vectorized` wraps it in its own.
+    """
     e = times_s.shape[0]
     # Stable grouping by worker: within a group events alternate IN/OUT, so
     # consecutive (even, odd) positions form a timeslice.
@@ -225,57 +274,74 @@ def _pair_and_aggregate(times_s, workers, deltas, gcm, idle,
     s_start = times_s[prev_global]
     s_end = times_s[out_global]
     dur = s_end - s_start
-    threads_av = jnp.where(slice_cm > 0, dur / jnp.maximum(slice_cm, 1e-30), 1.0)
+    # active count at the out event, including the exiting worker (numpy
+    # oracle semantics for the zero-CMetric fallback)
+    n_exit = jnp.cumsum(deltas)[out_global] + 1
+    threads_av = jnp.where(slice_cm > 0, dur / jnp.maximum(slice_cm, 1e-30),
+                           jnp.maximum(n_exit, 1).astype(s_start.dtype))
     valid = is_out_pos
     per_worker = jax.ops.segment_sum(jnp.where(valid, slice_cm, 0.0), ws,
                                      num_segments=num_workers)
     return (per_worker, idle, valid, ws, s_start, s_end, slice_cm, threads_av,
-            out_global)
+            n_exit, out_global)
+
+
+@functools.partial(jax.jit, static_argnames=("num_workers",))
+def _vector_pipeline(times_s, workers, deltas, num_workers: int):
+    _, _, gcm, idle = _fold_interval_terms(times_s, deltas)
+    return _pair_core(times_s, workers, deltas, gcm, idle, num_workers)
 
 
 def _result_from_pairing(log: EventLog, t, outs) -> CMetricResult:
-    (per_worker, idle, valid, ws, s_start, s_end, s_cm, s_av, out_global) = outs
+    (per_worker, idle, valid, ws, s_start, s_end, s_cm, s_av, s_n,
+     out_global) = outs
     valid = np.asarray(valid)
     out_global = np.asarray(out_global)[valid]
     order = np.argsort(out_global, kind="stable")    # restore time order
     sel = lambda x: np.asarray(x)[valid][order]
-    return CMetricResult(
-        per_worker=np.asarray(per_worker, np.float64),
-        slice_worker=sel(ws).astype(np.int32),
-        slice_start=sel(s_start).astype(np.float64),
-        slice_end=sel(s_end).astype(np.float64),
-        slice_cm=sel(s_cm).astype(np.float64),
-        slice_threads_av=sel(s_av).astype(np.float64),
-        slice_stack=log.stacks[out_global[order]],
-        idle_time=float(idle),
-        total_time=float(np.asarray(t)[-1] - np.asarray(t)[0]),
-    )
+    tn = np.asarray(t)
+    return _make_result(log, per_worker, sel(ws), sel(s_start), sel(s_end),
+                        sel(s_cm), sel(s_av), log.stacks[out_global[order]],
+                        sel(s_n), idle, tn[-1] - tn[0])
+
+
+def drive_pairing(log: EventLog, pipeline) -> CMetricResult:
+    """Shared host driver for pairing-based backends: move the log to device
+    arrays, run one jitted ``pipeline(t, workers, deltas, num_workers=...)``
+    returning :func:`_pair_core` outputs, and materialise the result table."""
+    if len(log) == 0:
+        return _empty_result(log.num_workers)
+    t = jnp.asarray(log.slice_seconds(), jnp.float32)
+    outs = pipeline(t, jnp.asarray(log.workers),
+                    jnp.asarray(log.deltas, jnp.int32),
+                    num_workers=log.num_workers)
+    return _result_from_pairing(log, t, outs)
 
 
 def compute_vectorized(log: EventLog) -> CMetricResult:
     """Data-parallel CMetric (sort + scans + segment-sum).  Same results as
-    :func:`compute_numpy` up to float32 tolerance; this host-side driver is
-    also reused by the Pallas fold backend (which swaps in its own gcm)."""
-    e = len(log)
-    if e == 0:
-        return _empty_result(log.num_workers)
-    t = jnp.asarray(log.slice_seconds(), jnp.float32)
-    deltas = jnp.asarray(log.deltas, jnp.int32)
-    _, _, gcm, idle = _fold_interval_terms(t, deltas)
-    outs = _pair_and_aggregate(t, jnp.asarray(log.workers), deltas, gcm, idle,
-                               log.num_workers)
-    return _result_from_pairing(log, t, outs)
+    :func:`compute_numpy` up to float32 tolerance; the pairing core is shared
+    with the Pallas fold backend (which swaps in its own gcm prefix)."""
+    return drive_pairing(log, _vector_pipeline)
 
 
-_BACKENDS = {
-    "numpy": compute_numpy,
-    "stream": compute_streaming,
-    "vector": compute_vectorized,
-}
+def _compute_pallas(log: EventLog) -> CMetricResult:
+    # Lazy import: keeps jax.experimental.pallas out of plain-numpy users
+    # and avoids a module-level import cycle with repro.kernels.
+    from repro.kernels import ops
+    return ops.compute_pallas(log)
+
+
+register_backend("numpy", compute_numpy,
+                 capabilities={"oracle", "float64", "exact"})
+register_backend("stream", compute_streaming,
+                 capabilities={"device", "sequential", "paper-faithful"})
+register_backend("vector", compute_vectorized,
+                 capabilities={"device", "parallel"})
+register_backend("pallas", _compute_pallas,
+                 capabilities={"device", "parallel", "fused", "tpu"})
 
 
 def compute(log: EventLog, backend: str = "numpy") -> CMetricResult:
-    if backend == "pallas":                      # lazy import to avoid cycles
-        from repro.kernels import ops
-        return ops.compute_pallas(log)
-    return _BACKENDS[backend](log)
+    """Dispatch through the :mod:`repro.core.backends` registry."""
+    return backends_lib.compute(log, backend=backend)

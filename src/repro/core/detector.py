@@ -11,6 +11,17 @@ Pipeline (exactly the paper's user-space probe):
   4. if a critical slice has no samples and its exit-time active count was
      ≤ n_min, attach the top-of-stack tag labelled ``stack_top`` (§4.4
      "Critical timeslices with no samples").
+
+Two merge implementations:
+
+* :func:`merge_table` — the production path, fully vectorised over the
+  columnar :class:`~repro.core.slices.SliceTable`: one ``searchsorted`` per
+  worker group for sample attachment (instead of two per slice), path merge
+  via grouped ``bincount`` keyed on stack id, and tag frequency tables via a
+  flat (path, tag) histogram that can run through the Pallas ``tag_hist``
+  kernel.
+* :func:`_merge_python` — the original per-slice Python loop, retained as
+  the equivalence oracle for tests and as the reference semantics.
 """
 from __future__ import annotations
 
@@ -19,10 +30,11 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import cmetric as cmetric_lib
+from repro.core import backends as backends_lib
 from repro.core.events import EventLog, NO_STACK, NO_TAG
 from repro.core.sampler import SampleBuffer, simulate_samples
-from repro.core.tracer import CriticalSlice, StackRegistry, TagRegistry, Tracer
+from repro.core.slices import CriticalSlice, SliceTable
+from repro.core.tracer import StackRegistry, TagRegistry, Tracer
 
 
 @dataclasses.dataclass
@@ -53,6 +65,7 @@ class BottleneckReport:
     total_slices: int
     idle_time: float
     total_time: float
+    critical_table: SliceTable | None = None   # the merged slices, columnar
 
     @property
     def critical_ratio(self) -> float:     # paper Table 2 "CR" column
@@ -67,13 +80,158 @@ class BottleneckReport:
         return " > ".join(self.tag_name(t) for t in p.stack) or "<no-path>"
 
 
-def _merge(
+# ---------------------------------------------------------------------------
+# merge: vectorised table pipeline (production) + Python loop (oracle)
+# ---------------------------------------------------------------------------
+
+def _path_groups(stack_ids: np.ndarray, stacks: StackRegistry):
+    """Group slice rows by call path, preserving first-seen order.
+
+    Distinct stack ids can resolve to the same path key (NO_STACK and any
+    out-of-range id both mean "no path"), so grouping goes through the path
+    tuple.  Work is O(unique ids), not O(slices).
+    """
+    sid_vals, first_idx, inv = np.unique(stack_ids, return_index=True,
+                                         return_inverse=True)
+    paths = stacks.paths
+    gid_of_val = np.zeros(len(sid_vals), np.int64)
+    path_by_gid: list[tuple] = []
+    seen: dict[tuple, int] = {}
+    for k in np.argsort(first_idx, kind="stable"):
+        sid = int(sid_vals[k])
+        path = paths[sid] if 0 <= sid < len(paths) else ()
+        g = seen.get(path)
+        if g is None:
+            g = seen[path] = len(path_by_gid)
+            path_by_gid.append(path)
+        gid_of_val[k] = g
+    return gid_of_val[inv], path_by_gid
+
+
+def _attach_samples(crit: SliceTable, samples: SampleBuffer | None):
+    """Vectorised step 1: map every sample to its enclosing critical slices.
+
+    Slices are sorted by (worker, start); per *worker group* (not per slice)
+    two ``searchsorted`` calls bound the contiguous run of slices whose
+    inclusive ``[start, end]`` window contains each sample — a worker's
+    slices are time-disjoint, so starts *and* ends are non-decreasing within
+    a group, and a sample on a shared boundary (end of one slice == start of
+    the next) lands in both, exactly like the per-slice oracle's two-sided
+    range check.  Returns (slice row indices, sample tags) of the attached
+    samples, one entry per (sample, slice) match.
+    """
+    if samples is None or len(samples) == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int32)
+    st, sw, stag = samples.frozen_sorted()
+    order = np.lexsort((crit.start_ns, crit.worker))
+    cw = crit.worker[order]
+    cs = crit.start_ns[order]
+    ce = crit.end_ns[order]
+    grp_w, grp_lo = np.unique(cw, return_index=True)
+    grp_hi = np.append(grp_lo[1:], len(cw))
+    rows, tags = [], []
+    for g in range(len(grp_w)):
+        lo = np.searchsorted(sw, grp_w[g], side="left")
+        hi = np.searchsorted(sw, grp_w[g], side="right")
+        if lo == hi:
+            continue
+        tw = st[lo:hi]
+        a, b = grp_lo[g], grp_hi[g]
+        j_lo = np.searchsorted(ce[a:b], tw, side="left")
+        j_hi = np.searchsorted(cs[a:b], tw, side="right")
+        counts = np.maximum(j_hi - j_lo, 0)
+        total = int(counts.sum())
+        if total == 0:
+            continue
+        # expand each sample to its [j_lo, j_hi) run of enclosing slices
+        base = np.repeat(j_lo, counts)
+        offs = np.arange(total) - np.repeat(np.cumsum(counts) - counts,
+                                            counts)
+        rows.append(order[a + base + offs])
+        tags.append(np.repeat(stag[lo:hi], counts))
+    if not rows:
+        return np.zeros(0, np.int64), np.zeros(0, np.int32)
+    return np.concatenate(rows), np.concatenate(tags)
+
+
+def _pallas_hist_native() -> bool:
+    """True when the Pallas ``tag_hist`` kernel compiles natively — in
+    interpret mode (off-TPU) ``np.bincount`` is far faster, so the fused
+    backend only routes the histogram on real TPU hardware."""
+    from repro.kernels import ops
+    return not ops.default_interpret()
+
+
+def _key_hist(keys: np.ndarray, num_bins: int, use_pallas: bool) -> np.ndarray:
+    """Histogram of flat (group, tag) keys — optionally on the Pallas
+    ``tag_hist`` kernel (TPU path); ``bincount`` otherwise."""
+    if use_pallas and num_bins <= (1 << 20):
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        counts, _ = ops.tag_histogram(jnp.asarray(keys, jnp.int32),
+                                      num_bins=num_bins)
+        return np.asarray(counts)
+    return np.bincount(keys, minlength=num_bins)
+
+
+def merge_table(
+    crit: SliceTable,
+    samples: SampleBuffer | None,
+    stacks: StackRegistry,
+    n_min: float,
+    *,
+    use_pallas_hist: bool = False,
+) -> tuple[list[PathProfile], int]:
+    """Steps 1/2/4 over the columnar IR.  Returns the merged profiles in
+    first-seen path order (the seed dict-insertion order, so downstream
+    ranking tie-breaks identically) and the attached-sample count."""
+    s = len(crit)
+    if s == 0:
+        return [], 0
+    gids, path_by_gid = _path_groups(crit.stack_id, stacks)
+    ngroups = len(path_by_gid)
+    cm_sum = np.bincount(gids, weights=crit.cm, minlength=ngroups)
+    n_slices = np.bincount(gids, minlength=ngroups)
+
+    rows, tags = _attach_samples(crit, samples)
+    attached = int(rows.size)
+    per_slice_hits = np.bincount(rows, minlength=s)
+
+    # per-(path, tag) frequency tables via one flat histogram; the +1 offset
+    # admits NO_TAG (-1) samples, which the per-slice Counter also recorded
+    tag_tables: list[collections.Counter] = [collections.Counter()
+                                             for _ in range(ngroups)]
+    if attached:
+        k = int(tags.max()) + 2
+        counts = _key_hist(gids[rows] * k + (tags.astype(np.int64) + 1),
+                           ngroups * k, use_pallas_hist)
+        for key in np.flatnonzero(counts):
+            tag_tables[key // k][int(key % k) - 1] = int(counts[key])
+
+    # stack-top fallback (§4.4): sampleless slice, low exit parallelism
+    path_len = np.asarray([len(p) for p in path_by_gid])
+    fb_mask = ((per_slice_hits == 0) & (crit.n_at_exit <= n_min)
+               & (path_len[gids] > 0))
+    fallbacks = np.bincount(gids[fb_mask], minlength=ngroups)
+
+    profiles = []
+    for g in range(ngroups):
+        p = PathProfile(stack=path_by_gid[g], cmetric=float(cm_sum[g]),
+                        slices=int(n_slices[g]), tag_counts=tag_tables[g])
+        if fallbacks[g]:
+            p.stack_top_counts[path_by_gid[g][-1]] = int(fallbacks[g])
+        profiles.append(p)
+    return profiles, attached
+
+
+def _merge_python(
     slices: list[CriticalSlice],
     samples: SampleBuffer | None,
     stacks: StackRegistry,
     n_min: float,
 ) -> tuple[dict[tuple, PathProfile], int]:
-    """Steps 1/2/4: sample attachment, path merge, stack-top fallback."""
+    """Seed per-slice merge loop — the equivalence oracle for
+    :func:`merge_table` (two searchsorted per slice, Counter updates)."""
     by_path: dict[tuple, PathProfile] = {}
     if not slices:
         return by_path, 0
@@ -108,6 +266,10 @@ def _merge(
     return by_path, attached
 
 
+# Back-compat alias (seed name).
+_merge = _merge_python
+
+
 def detect(
     tracer: Tracer,
     samples: SampleBuffer | None = None,
@@ -115,8 +277,9 @@ def detect(
 ) -> BottleneckReport:
     """Live-mode detection straight from the tracer's online state."""
     n_min = tracer._resolved_n_min()
-    by_path, _ = _merge(tracer.critical, samples, tracer.stacks, n_min)
-    paths = sorted(by_path.values(), key=lambda p: -p.cmetric)[:top_n]
+    crit = tracer.critical.table()
+    paths_all, _ = merge_table(crit, samples, tracer.stacks, n_min)
+    paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
     log_len = min(tracer.ring.head, tracer.ring.capacity)
     total_slices = int(np.sum(
         tracer.ring.deltas[:log_len] == -1)) if log_len else 0
@@ -126,11 +289,12 @@ def detect(
         worker_names=tracer.worker_names(),
         tag_names=list(tracer.tags.names),
         tag_locations=list(tracer.tags.locations),
-        total_critical=len(tracer.critical),
+        total_critical=len(crit),
         total_slices=total_slices,
         idle_time=tracer.idle_time,
         total_time=((tracer.t_switch - tracer.t_first) * 1e-9
                     if tracer.t_first is not None else 0.0),
+        critical_table=crit,
     )
 
 
@@ -146,14 +310,24 @@ def detect_offline(
     worker_names: list[str] | None = None,
 ) -> BottleneckReport:
     """Offline pipeline: recompute CMetric from a raw event log with any
-    backend (numpy / stream / vector / pallas), optionally replaying the
-    sampling probe, then run the same merge+rank post-processing."""
-    res = cmetric_lib.compute(log, backend=backend)
+    registered backend (numpy / stream / vector / pallas), optionally
+    replaying the sampling probe, then run the same merge+rank
+    post-processing — all stages over the columnar slice table.
+
+    Raw logs are sanitized first (spurious double-ACTIVATE / unmatched
+    DEACTIVATE are dropped exactly as the live tracer would), so adversarial
+    streams produce the same report on every backend.
+    """
+    log = log.sanitize()
+    res = backends_lib.compute(log, backend=backend)
     if samples is None and sample_dt_ns is not None:
         samples = simulate_samples(log, sample_dt_ns, n_min)
-    crit = critical_slices_from_result(log, res, n_min)
-    by_path, _ = _merge(crit, samples, stacks, n_min)
-    paths = sorted(by_path.values(), key=lambda p: -p.cmetric)[:top_n]
+    crit = res.critical_table(n_min)
+    caps = backends_lib.get_backend(backend).capabilities
+    paths_all, _ = merge_table(crit, samples, stacks, n_min,
+                               use_pallas_hist="fused" in caps
+                               and _pallas_hist_native())
+    paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
     return BottleneckReport(
         paths=paths,
         per_worker=res.per_worker,
@@ -164,32 +338,12 @@ def detect_offline(
         total_slices=res.num_slices,
         idle_time=res.idle_time,
         total_time=res.total_time,
+        critical_table=crit,
     )
 
 
-def critical_slices_from_result(
-    log: EventLog, res: cmetric_lib.CMetricResult, n_min: float,
-) -> list[CriticalSlice]:
-    """Rebuild CriticalSlice records from an offline CMetric result.
-
-    Slice times in the result are rebased seconds; convert back to the log's
-    ns timeline so samples (which carry ns timestamps) can be attached.
-    """
-    t0 = int(log.times[0]) if len(log) else 0
-    mask = res.critical_mask(n_min)
-    out: list[CriticalSlice] = []
-    # instantaneous active count at exit: recompute from the log
-    counts = np.cumsum(log.deltas.astype(np.int64))
-    out_positions = np.flatnonzero(log.deltas == -1)
-    n_at_exit = counts[out_positions] + 1   # count before the decrement
-    for i in np.flatnonzero(mask):
-        out.append(CriticalSlice(
-            worker=int(res.slice_worker[i]),
-            start_ns=t0 + int(round(res.slice_start[i] * 1e9)),
-            end_ns=t0 + int(round(res.slice_end[i] * 1e9)),
-            cm=float(res.slice_cm[i]),
-            threads_av=float(res.slice_threads_av[i]),
-            stack_id=int(res.slice_stack[i]),
-            n_at_exit=int(n_at_exit[i]) if i < len(n_at_exit) else 1,
-        ))
-    return out
+def critical_slices_from_result(log, res, n_min: float) -> list[CriticalSlice]:
+    """Legacy view: critical rows of an offline result as per-slice records
+    (the columnar pipeline uses ``res.critical_table(n_min)`` directly)."""
+    del log  # times are already on the log's ns clock inside the table
+    return res.critical_table(n_min).to_records()

@@ -68,6 +68,47 @@ class EventLog:
             return np.zeros((0,), np.float64)
         return (self.times - self.times[0]).astype(np.float64) * 1e-9
 
+    def is_well_formed(self) -> bool:
+        """True iff every worker's events alternate starting with ACTIVATE
+        (what :meth:`validate` enforces), checked vectorised."""
+        if len(self) == 0:
+            return True
+        order = np.argsort(self.workers, kind="stable")
+        w = self.workers[order]
+        d = self.deltas[order]
+        first = np.concatenate([[True], w[1:] != w[:-1]])
+        return bool(np.all(d[first] == ACTIVATE)
+                    and not np.any((d[1:] == d[:-1]) & (w[1:] == w[:-1])))
+
+    def sanitize(self) -> "EventLog":
+        """Apply the live tracer's tolerance rules (paper §3.2) offline:
+        drop an ACTIVATE of an already-active worker and a DEACTIVATE of an
+        inactive worker.  External/raw streams can carry both (spurious
+        wake-ups, truncated captures); the offline pairing stage assumes
+        alternation, so dirty logs must pass through here (``detect_offline``
+        does it automatically).  Returns ``self`` when already well-formed.
+        """
+        if self.is_well_formed():
+            return self
+        # Vectorised greedy filter.  Per worker, the tracer's rules keep the
+        # subsequence that alternates starting with ACTIVATE, chosen
+        # greedily — which for a ±1 stream equals collapsing runs of equal
+        # deltas to their first event and then dropping a leading
+        # DEACTIVATE: runs alternate in value by construction, so the
+        # collapsed sequence already alternates, and skipping an initial
+        # all-DEACTIVATE run is exactly dropping its first survivor.
+        order = np.argsort(self.workers, kind="stable")
+        w = self.workers[order]
+        d = self.deltas[order]
+        first = np.concatenate([[True], w[1:] != w[:-1]])
+        run_start = np.concatenate([[True], d[1:] != d[:-1]]) | first
+        keep_sorted = run_start & ~(first & (d == DEACTIVATE))
+        keep = np.zeros(len(self), bool)
+        keep[order] = keep_sorted
+        return EventLog(self.times[keep], self.workers[keep],
+                        self.deltas[keep], self.tags[keep], self.stacks[keep],
+                        self.num_workers)
+
 
 class EventRing:
     """Pre-allocated ring buffer for events (paper's eBPF ring buffer).

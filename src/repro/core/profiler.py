@@ -82,6 +82,20 @@ class Gapp:
     def freeze(self) -> EventLog:
         return self.tracer.freeze()
 
+    def offline_report(self, backend: str = "vector",
+                       sample_dt_ns: int | None = None,
+                       top_n: int | None = None
+                       ) -> detector_lib.BottleneckReport:
+        """Recompute the profile offline from the ring buffer with any
+        registered backend (cross-validates the online numbers; the vector/
+        pallas paths are the fleet-scale post-processing route)."""
+        return detector_lib.detect_offline(
+            self.freeze(), self.tracer.tags, self.tracer.stacks,
+            self.tracer._resolved_n_min(), samples=self.probe.buffer
+            if len(self.probe.buffer) else None, sample_dt_ns=sample_dt_ns,
+            backend=backend, top_n=top_n or self.top_n,
+            worker_names=self.tracer.worker_names())
+
 
 def profile_log(
     log: EventLog,

@@ -20,6 +20,11 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
     lines.append(f"  timeslices       : {rep.total_slices}")
     lines.append(f"  critical slices  : {rep.total_critical} "
                  f"(CR {100.0 * rep.critical_ratio:.2f}%)")
+    ct = rep.critical_table
+    if ct is not None and len(ct):
+        lines.append(f"  critical av par  : "
+                     f"{float(np.mean(ct.threads_av)):10.2f} "
+                     f"(mean over {len(ct)} slices)")
     lines.append("=" * 72)
     paths = rep.paths if max_paths is None else rep.paths[:max_paths]
     for rank, p in enumerate(paths, 1):
@@ -54,12 +59,17 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
 
 
 def to_json(rep: BottleneckReport) -> str:
+    ct = rep.critical_table
     return json.dumps({
         "total_time_s": rep.total_time,
         "idle_time_s": rep.idle_time,
         "total_slices": rep.total_slices,
         "total_critical": rep.total_critical,
         "critical_ratio": rep.critical_ratio,
+        "critical_threads_av_mean": (float(np.mean(ct.threads_av))
+                                     if ct is not None and len(ct) else None),
+        "critical_cm_s": (float(np.sum(ct.cm))
+                          if ct is not None and len(ct) else 0.0),
         "per_worker_cmetric_s": rep.per_worker.tolist(),
         "worker_names": rep.worker_names,
         "paths": [

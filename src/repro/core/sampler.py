@@ -27,6 +27,8 @@ class SampleBuffer:
         self.tags = np.zeros(capacity, np.int32)
         self.head = 0
         self.dropped = 0
+        self._sorted = None
+        self._sorted_head = -1
 
     def append(self, t: int, worker: int, tag: int) -> None:
         i = self.head
@@ -41,6 +43,18 @@ class SampleBuffer:
     def frozen(self):
         n = self.head
         return self.times[:n], self.workers[:n], self.tags[:n]
+
+    def frozen_sorted(self):
+        """(times, workers, tags) lexsorted by (worker, time) — the layout
+        the vectorised detector attaches with one searchsorted per worker
+        group.  Cached until the next append."""
+        n = self.head
+        if self._sorted is None or self._sorted_head != n:
+            t, w, g = self.frozen()
+            order = np.lexsort((t, w))
+            self._sorted = (t[order], w[order], g[order])
+            self._sorted_head = n
+        return self._sorted
 
     def __len__(self) -> int:
         return self.head

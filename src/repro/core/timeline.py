@@ -19,7 +19,9 @@ def to_chrome_trace(log: EventLog, tag_names: list[str] | None = None,
                     critical=None) -> str:
     """Serialize an EventLog as a Chrome trace JSON string.
 
-    ``critical``: optional list of CriticalSlice to overlay.
+    ``critical``: optional critical slices to overlay — any iterable of
+    CriticalSlice rows (a list, a live ``CriticalBuffer`` or a columnar
+    ``SliceTable`` / ``CriticalTable``).
     """
     events = []
     open_spans: dict[int, tuple[int, int]] = {}

@@ -31,17 +31,7 @@ from typing import Iterator
 import numpy as np
 
 from repro.core.events import ACTIVATE, DEACTIVATE, NO_STACK, NO_TAG, EventLog, EventRing
-
-
-@dataclasses.dataclass
-class CriticalSlice:
-    worker: int
-    start_ns: int
-    end_ns: int
-    cm: float            # seconds
-    threads_av: float
-    stack_id: int
-    n_at_exit: int       # instantaneous active count at switch-out
+from repro.core.slices import CriticalBuffer, CriticalSlice  # noqa: F401 (re-export)
 
 
 @dataclasses.dataclass
@@ -125,7 +115,9 @@ class Tracer:
         self.idle_time = 0.0
         self.t_switch: int | None = None
         self.t_first: int | None = None
-        self.critical: list[CriticalSlice] = []
+        # online critical slices, stored columnar: .table() hands the whole
+        # buffer to the vectorised detector without a per-slice conversion
+        self.critical = CriticalBuffer()
         self._lock = threading.Lock()
         self.enabled = True
 
@@ -174,9 +166,9 @@ class Tracer:
             threads_av = dur / slice_cm if slice_cm > 0 else float(
                 max(self.thread_count + 1, 1))
             if threads_av < self._resolved_n_min():
-                self.critical.append(CriticalSlice(
+                self.critical.append(
                     wid, self.slice_start.get(wid, t), t, slice_cm,
-                    threads_av, stack, self.thread_count + 1))
+                    threads_av, stack, self.thread_count + 1)
         self.ring.append(t, wid, delta, tag, stack)
 
     # -- public span API ------------------------------------------------------

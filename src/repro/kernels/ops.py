@@ -5,6 +5,8 @@ is the compile target) and False on real TPU backends.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -37,15 +39,24 @@ def tag_histogram(tags, weights=None, *, num_bins: int, block: int = 1024,
                       interpret=interpret)
 
 
-def compute_pallas(log):
-    """CMetric backend using the Pallas fold for the prefix stage and the
-    shared pairing/aggregation stage for the rest."""
+@functools.partial(jax.jit, static_argnames=("num_workers", "block",
+                                             "interpret"))
+def _fused_pipeline(times_s, workers, deltas, num_workers: int, block: int,
+                    interpret: bool):
+    """Fold (Pallas kernel) + pairing + segment-sum as ONE jitted program —
+    the gcm prefix never leaves the device between stages."""
     from repro.core import cmetric as cmetric_lib  # avoid import cycle
-    if len(log) == 0:
-        return cmetric_lib.compute_numpy(log)
-    t = jnp.asarray(log.slice_seconds(), jnp.float32)
-    deltas = jnp.asarray(log.deltas, jnp.int32)
-    _, gcm, _, idle = cmetric_fold(t, deltas)
-    outs = cmetric_lib._pair_and_aggregate(
-        t, jnp.asarray(log.workers), deltas, gcm, idle, log.num_workers)
-    return cmetric_lib._result_from_pairing(log, t, outs)
+    _, gcm, _, idle = cmetric_fold(times_s, deltas, block=block,
+                                   interpret=interpret)
+    return cmetric_lib._pair_core(times_s, workers, deltas, gcm, idle,
+                                  num_workers)
+
+
+def compute_pallas(log, *, block: int = 2048, interpret: bool | None = None):
+    """CMetric backend: the Pallas fold kernel fused with the shared pairing
+    /aggregation core (see :func:`repro.core.cmetric.drive_pairing`)."""
+    from repro.core import cmetric as cmetric_lib  # avoid import cycle
+    interpret = default_interpret() if interpret is None else interpret
+    return cmetric_lib.drive_pairing(
+        log, functools.partial(_fused_pipeline, block=block,
+                               interpret=interpret))

@@ -10,23 +10,35 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types across JAX versions.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types`` kwarg taking it) only
+    exists in newer JAX releases — on older ones the attribute access raises
+    through the deprecation machinery.  Auto is the default everywhere, so
+    the kwarg is passed only when the enum is present.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int | None = None,
                    stage: int | None = None):
     """Small mesh over whatever local devices exist (tests/examples)."""
     n = len(jax.devices())
-    auto = jax.sharding.AxisType.Auto
     if stage is not None:
-        return jax.make_mesh((stage,), ("stage",), axis_types=(auto,))
+        return make_mesh((stage,), ("stage",))
     data = data if data is not None else n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(auto, auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) — the roofline denominators.

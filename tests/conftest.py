@@ -1,6 +1,34 @@
 import os
 import sys
 
+import pytest
+
 # Make `import repro` work regardless of PYTHONPATH.
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shim: property tests skip cleanly when hypothesis is absent
+# (pip install -r requirements-dev.txt to enable them) while plain tests in
+# the same module keep running.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                            # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    def _skip_decorator(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="needs hypothesis (pip install -r "
+                       "requirements-dev.txt)")(fn)
+        return deco
+
+    given = settings = _skip_decorator
+    st = _StrategyStub()

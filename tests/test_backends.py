@@ -1,0 +1,67 @@
+"""CMetric backend registry: dispatch, capabilities, custom registration."""
+import numpy as np
+import pytest
+
+from repro.core import (available_backends, backends_with, compute,
+                        compute_vectorized, get_backend, register_backend,
+                        synthetic_log)
+from repro.core import backends as backends_lib
+
+
+def test_registry_has_all_four_backends():
+    names = available_backends()
+    for b in ("numpy", "stream", "vector", "pallas"):
+        assert b in names
+
+
+def test_unknown_backend_raises_with_available_names():
+    with pytest.raises(KeyError, match="numpy"):
+        get_backend("no-such-backend")
+
+
+def test_capability_queries():
+    assert "numpy" in backends_with("oracle")
+    assert "numpy" not in backends_with("device")
+    for b in ("stream", "vector", "pallas"):
+        assert b in backends_with("device")
+    assert backends_with("fused") == ["pallas"]
+    assert "fused" in get_backend("pallas").capabilities
+
+
+def test_compute_dispatches_through_registry():
+    rng = np.random.default_rng(0)
+    log = synthetic_log(rng, 4, 10)
+    a = compute(log, backend="vector")
+    b = compute_vectorized(log)
+    np.testing.assert_allclose(a.per_worker, b.per_worker, rtol=1e-9)
+
+
+def test_register_custom_backend_and_unregister():
+    calls = []
+
+    @register_backend("test_probe", capabilities={"test"})
+    def probe(log):
+        calls.append(len(log))
+        return compute(log, backend="numpy")
+
+    try:
+        assert "test_probe" in available_backends()
+        assert backends_with("test") == ["test_probe"]
+        rng = np.random.default_rng(1)
+        log = synthetic_log(rng, 3, 5)
+        res = compute(log, backend="test_probe")
+        assert calls == [len(log)]
+        assert res.num_slices == 15
+    finally:
+        backends_lib.unregister_backend("test_probe")
+    assert "test_probe" not in available_backends()
+    with pytest.raises(KeyError):
+        get_backend("test_probe")
+
+
+def test_pallas_registration_is_lazy():
+    # the registry holds a loader; resolving the name must not import the
+    # kernels package as a side effect of registry lookups alone
+    b = get_backend("pallas")
+    assert b.name == "pallas"
+    assert callable(b.fn)

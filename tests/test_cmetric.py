@@ -2,7 +2,11 @@
 hypothesis invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                   # `python -m pytest` from the repo root
+    from tests.conftest import given, settings, st
+except ImportError:                    # plain `pytest` (tests/ on sys.path)
+    from conftest import given, settings, st
 
 from repro.core import (EventLog, compute_numpy, compute_streaming,
                         compute_vectorized, compute, synthetic_log)

@@ -28,8 +28,8 @@ from repro.optim import adamw
 from repro.sharding import api as shapi, params as shparams
 from repro.train.step import make_train_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 out = {}
 for arch in json.loads(os.environ["ARCHS"]):
     cfg = configs.get_tiny(arch)
@@ -88,8 +88,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from repro.pipeline.gpipe import gpipe
 
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("stage",))
 def stage_fn(p, x):
     return jnp.tanh(x @ p["w"])
 key = jax.random.PRNGKey(0)

@@ -12,8 +12,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.serve.decode_sharded import make_flash_decode
 from repro.models.common import ModelConfig
 
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("model",))
 cfg = ModelConfig(num_heads=8, num_kv_heads=2, head_dim=16)
 B, L, H, KV, hd = 3, 64, 8, 2, 16
 key = jax.random.PRNGKey(0)

@@ -7,14 +7,14 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.launch.mesh import make_mesh
 from repro.models import init_lm
 from repro.sharding import api as shapi
 from repro.sharding import params as shparams
 
 
 def _mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_filter_entry_drops_missing_axes():
@@ -25,8 +25,7 @@ def test_filter_entry_drops_missing_axes():
 
 
 def test_filter_entry_divisibility():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2) \
+    mesh = make_mesh((2, 4), ("data", "model")) \
         if len(jax.devices()) >= 8 else None
     if mesh is None:
         pytest.skip("needs 8 devices (covered by subprocess tests)")
