@@ -1,9 +1,11 @@
 """CMetric cost: per-event online probe cost + offline fold throughput.
 
 Paper claim: the in-kernel probe is cheap enough for ~4% average overhead.
-Our analogue: the probe body (Python, tracer lock + map updates) per event,
-and the offline backends' events/second (numpy oracle, streaming scan,
-vectorised, Pallas fold) — the throughput table behind the PPT column.
+Our analogue: the probe microbenchmark (sharded lock-free hot path vs the
+retained locked seed body, single-thread and contended — see
+``bench_probe``), the offline backends' events/second (numpy oracle,
+streaming scan, vectorised, Pallas fold), and the carry-resumable chunked
+fold's throughput — the numbers behind the PPT column.
 """
 from __future__ import annotations
 
@@ -11,8 +13,8 @@ import time
 
 import numpy as np
 
-from repro.core import (Tracer, compute_numpy, compute_streaming,
-                        compute_vectorized, compute, synthetic_log)
+from repro.core import (FoldCarry, compute, compute_numpy, compute_streaming,
+                        compute_vectorized, fold_chunk, synthetic_log)
 
 
 def _time(fn, reps=3):
@@ -26,17 +28,16 @@ def _time(fn, reps=3):
 
 def run():
     rows = []
-    # --- online probe cost (per begin/end pair) ---------------------------
-    tr = Tracer(n_min=1)
-    w = tr.register_worker("w")
-    n = 20_000
-    t0 = time.perf_counter()
-    for _ in range(n):
-        tr.begin(w, "x")
-        tr.end(w)
-    dt = time.perf_counter() - t0
-    rows.append(("cmetric_probe_pair", dt / n * 1e6,
-                 f"events/s={2 * n / dt:.0f}"))
+    # --- online probe cost: sharded hot path vs locked seed body ----------
+    from benchmarks.bench_probe import run_probe
+    p = run_probe(pairs=10_000, reps=2)
+    rows.append(("cmetric_probe_pair", 2 * p["sharded_us_per_event_1t"],
+                 f"events/s={1e6 / p['sharded_us_per_event_1t']:.0f};"
+                 f"vs_locked_1t={p['speedup_1t']:.1f}x;"
+                 f"vs_locked_{p['threads']}t={p['speedup_mt']:.1f}x"))
+    rows.append(("cmetric_probe_pair_locked",
+                 2 * p["locked_us_per_event_1t"],
+                 f"events/s={1e6 / p['locked_us_per_event_1t']:.0f}"))
 
     # --- offline fold throughput ------------------------------------------
     rng = np.random.default_rng(0)
@@ -53,4 +54,17 @@ def run():
         dt = _time(fn, reps=2 if name != "numpy" else 1)
         rows.append((f"cmetric_fold_{name}", dt / e * 1e6,
                      f"events/s={e / dt:.0f};events={e}"))
+
+    # --- chunked (bounded-memory) fold throughput -------------------------
+    def chunked():
+        carry = FoldCarry.init(log.num_workers)
+        for lo in range(0, e, 65_536):
+            carry, _ = fold_chunk(carry, log.chunk(lo, lo + 65_536),
+                                  backend="numpy")
+        return carry
+
+    chunked()
+    dt = _time(chunked, reps=2)
+    rows.append(("cmetric_fold_chunked_numpy", dt / e * 1e6,
+                 f"events/s={e / dt:.0f};chunk=65536"))
     return rows

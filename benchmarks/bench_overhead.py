@@ -69,15 +69,14 @@ def run():
     t0 = time.perf_counter()
     rep = g.report()
     ppt = time.perf_counter() - t0
-    ring = g.tracer.ring
-    mem = (ring.times.nbytes + ring.workers.nbytes + ring.deltas.nbytes
-           + ring.tags.nbytes + ring.stacks.nbytes
-           + g.probe.buffer.times.nbytes * 3)
+    mem = g.tracer.memory_bytes() + g.probe.buffer.times.nbytes * 3
+    events = g.tracer.ring.total_events()
     rows = [
         ("overhead_train_loop", wall_on * 1e6 / steps,
          f"OH%={overhead:.1f};CR%={100 * rep.critical_ratio:.1f};"
          f"M_MB={mem / 2**20:.1f};PPT_s={ppt:.4f};slices={rep.total_slices}"),
-        ("overhead_events_per_step", ring.head / steps,
-         f"ring_events={ring.head};samples={len(g.probe.buffer)}"),
+        ("overhead_events_per_step", events / steps,
+         f"ring_events={events};dropped={g.tracer.ring.dropped};"
+         f"samples={len(g.probe.buffer)}"),
     ]
     return rows

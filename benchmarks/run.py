@@ -38,27 +38,54 @@ def smoke_detect(n_slices: int, out: str) -> dict:
     return res
 
 
+def smoke_probe(pairs: int, threads: int, out: str) -> dict:
+    """CI smoke target: per-event probe cost, sharded lock-free hot path vs
+    the retained locked seed body, single-thread and contended
+    (``python -m benchmarks.run --smoke probe`` -> BENCH_probe.json)."""
+    from benchmarks import bench_probe
+    res = bench_probe.run_probe(pairs=pairs, threads=threads)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# probe hot path: locked "
+          f"{res['locked_us_per_event_1t']:.2f}us/ev 1t "
+          f"/ {res['locked_us_per_event_mt']:.2f}us/ev {threads}t, sharded "
+          f"{res['sharded_us_per_event_1t']:.2f}us/ev 1t "
+          f"/ {res['sharded_us_per_event_mt']:.2f}us/ev {threads}t "
+          f"-> {res['speedup_1t']:.1f}x single, {res['speedup_mt']:.1f}x "
+          f"contended -> {out}")
+    return res
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", choices=["detect"],
+    ap.add_argument("--smoke", choices=["detect", "probe"],
                     help="run one fast smoke benchmark and write a JSON "
                          "artifact instead of the full CSV harness")
     ap.add_argument("--n-slices", type=int, default=250_000,
                     help="table size for --smoke detect (~43%% of rows land "
                          "under n_min, so the default yields >=1e5 critical "
                          "slices)")
-    ap.add_argument("--out", default="BENCH_detect.json",
-                    help="JSON artifact path for --smoke detect")
+    ap.add_argument("--pairs", type=int, default=20_000,
+                    help="begin/end pairs per worker for --smoke probe")
+    ap.add_argument("--threads", type=int, default=4,
+                    help="contending workers for --smoke probe")
+    ap.add_argument("--out", default=None,
+                    help="JSON artifact path (default BENCH_<smoke>.json)")
     args = ap.parse_args()
     if args.smoke == "detect":
-        smoke_detect(args.n_slices, args.out)
+        smoke_detect(args.n_slices, args.out or "BENCH_detect.json")
+        return
+    if args.smoke == "probe":
+        smoke_probe(args.pairs, args.threads, args.out or "BENCH_probe.json")
         return
 
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,
-                            bench_overhead)
+                            bench_overhead, bench_probe)
     print("# GAPP benchmark harness — paper-table analogues")
     print("name,us_per_call,derived")
-    for mod in (bench_cmetric, bench_overhead, bench_balance, bench_detect):
+    for mod in (bench_probe, bench_cmetric, bench_overhead, bench_balance,
+                bench_detect):
         t0 = time.time()
         for row in mod.run():
             name, us, derived = row

@@ -25,23 +25,33 @@ Architecture — the offline dataflow is columnar end-to-end::
         ▼
     BottleneckReport → render_text / to_json (``report.py``)
 
-The live path (``tracer.py``) maintains the same state online in O(1) per
-event (the paper's eBPF maps) and appends critical slices straight into a
-growable columnar ``CriticalBuffer`` whose ``.table()`` feeds the same
-detector.  Backends register themselves in ``backends.py`` via
-``register_backend(name, fn, capabilities=...)``; ``compute(log, backend=)``
+The live path (``tracer.py``) captures events into per-worker lock-free
+shards (``ShardedEventRing``) and maintains the same Table-1 state by
+draining the shards and replaying each batch through the carry-resumable
+vectorised fold (``fold_chunk`` + ``FoldCarry``) — the hot path is two
+deque appends, the map updates are batched array ops.  Critical slices
+land in a growable columnar ``CriticalBuffer`` whose ``.table()`` feeds
+the same detector; call paths are interned only for critical slices.
+``detect_offline(chunk_events=...)`` streams arbitrarily long logs
+through the same chunk fold in bounded memory.  Backends register
+themselves in ``backends.py`` via ``register_backend(name, fn,
+capabilities=..., fold_chunk=...)``; ``compute(log, backend=)``
 dispatches by name and new implementations can be plugged in without
 touching the pipeline.
 """
 from repro.core.events import (ACTIVATE, DEACTIVATE, EventLog, EventRing,
-                               synthetic_log)
+                               EventStore, ShardedEventRing, sanitize_chunk,
+                               synthetic_log, tolerance_keep)
 from repro.core.slices import (CriticalBuffer, CriticalSlice, CriticalTable,
                                SliceTable)
 from repro.core.backends import (available_backends, backends_with,
-                                 get_backend, register_backend)
-from repro.core.cmetric import (CMetricResult, compute, compute_numpy,
-                                compute_streaming, compute_vectorized)
-from repro.core.tracer import StackRegistry, TagRegistry, Tracer
+                                 backends_with_fold_chunk, get_backend,
+                                 register_backend)
+from repro.core.cmetric import (CMetricResult, FoldCarry, compute,
+                                compute_numpy, compute_streaming,
+                                compute_vectorized, fold_chunk)
+from repro.core.tracer import (LockedTracer, StackRegistry, TagRegistry,
+                               Tracer, WorkerHandle)
 from repro.core.sampler import SampleBuffer, SamplingProbe, simulate_samples
 from repro.core.detector import (BottleneckReport, PathProfile, detect,
                                  detect_offline, merge_table)
@@ -49,12 +59,15 @@ from repro.core.report import imbalance_stats, render_text, to_json
 from repro.core.profiler import Gapp, profile_log
 
 __all__ = [
-    "ACTIVATE", "DEACTIVATE", "EventLog", "EventRing", "synthetic_log",
+    "ACTIVATE", "DEACTIVATE", "EventLog", "EventRing", "EventStore",
+    "ShardedEventRing", "sanitize_chunk", "synthetic_log", "tolerance_keep",
     "SliceTable", "CriticalTable", "CriticalBuffer", "CriticalSlice",
-    "available_backends", "backends_with", "get_backend", "register_backend",
-    "CMetricResult", "compute", "compute_numpy", "compute_streaming",
-    "compute_vectorized", "StackRegistry", "TagRegistry",
-    "Tracer", "SampleBuffer", "SamplingProbe", "simulate_samples",
+    "available_backends", "backends_with", "backends_with_fold_chunk",
+    "get_backend", "register_backend",
+    "CMetricResult", "FoldCarry", "compute", "compute_numpy",
+    "compute_streaming", "compute_vectorized", "fold_chunk",
+    "StackRegistry", "TagRegistry", "Tracer", "LockedTracer", "WorkerHandle",
+    "SampleBuffer", "SamplingProbe", "simulate_samples",
     "BottleneckReport", "PathProfile", "detect", "detect_offline",
     "merge_table", "imbalance_stats", "render_text", "to_json", "Gapp",
     "profile_log",

@@ -28,6 +28,10 @@ class Backend:
     name: str
     fn: BackendFn
     capabilities: frozenset[str]
+    # carry-resumable chunk fold: (FoldCarry, EventLog) -> (FoldCarry,
+    # SliceTable).  Optional — backends without one only support whole-log
+    # computes; ``fold_chunk`` below raises for them.
+    chunk_fn: BackendFn | None = None
 
     def __call__(self, log):
         return self.fn(log)
@@ -37,15 +41,19 @@ _REGISTRY: dict[str, Backend] = {}
 
 
 def register_backend(name: str, fn: BackendFn | None = None, *,
-                     capabilities: Iterable[str] = ()) -> BackendFn:
+                     capabilities: Iterable[str] = (),
+                     fold_chunk: BackendFn | None = None) -> BackendFn:
     """Register ``fn`` as CMetric backend ``name``.
 
     Usable directly (``register_backend("numpy", compute_numpy)``) or as a
     decorator (``@register_backend("mine", capabilities={"device"})``).
-    Re-registering a name replaces it (tests swap in instrumented backends).
+    ``fold_chunk`` optionally attaches the backend's carry-resumable chunk
+    fold (see :class:`repro.core.cmetric.FoldCarry`).  Re-registering a
+    name replaces it (tests swap in instrumented backends).
     """
     def _register(f: BackendFn) -> BackendFn:
-        _REGISTRY[name] = Backend(name, f, frozenset(capabilities))
+        _REGISTRY[name] = Backend(name, f, frozenset(capabilities),
+                                  fold_chunk)
         return f
     return _register(fn) if fn is not None else _register
 
@@ -76,3 +84,19 @@ def backends_with(capability: str) -> list[str]:
 def compute(log, backend: str = "numpy"):
     """Dispatch an EventLog through the named backend."""
     return get_backend(backend)(log)
+
+
+def backends_with_fold_chunk() -> list[str]:
+    """Names of backends that support the carry-resumable chunk fold."""
+    return sorted(b.name for b in _REGISTRY.values()
+                  if b.chunk_fn is not None)
+
+
+def fold_chunk(carry, log, backend: str = "numpy"):
+    """Advance a :class:`repro.core.cmetric.FoldCarry` over one chunk with
+    the named backend; returns ``(carry, SliceTable)``."""
+    b = get_backend(backend)
+    if b.chunk_fn is None:
+        raise ValueError(f"backend {backend!r} has no chunked fold; "
+                         f"available: {', '.join(backends_with_fold_chunk())}")
+    return b.chunk_fn(carry, log)

@@ -27,6 +27,15 @@ Four implementations, equivalent up to float tolerance, registered in the
 All backends emit a :class:`~repro.core.slices.SliceTable`;
 :class:`CMetricResult` is a thin wrapper over it.
 
+Each backend also registers a **carry-resumable chunk fold**:
+``fold_chunk(carry, chunk) -> (carry, SliceTable)`` advances a
+:class:`FoldCarry` — exactly the paper's Table-1 eBPF-map state — over one
+batch of events.  Replaying *any* partition of a log reproduces the
+whole-log result (bit-equal float64 for ``numpy``, float32 tolerance for
+the device backends), which is what lets the live tracer maintain its
+online state by batches and ``detect_offline(chunk_events=...)`` stream
+unbounded logs in bounded memory.
+
 Degenerate timeslices (``slice_cm == 0``) fall back to
 ``threads_av = max(n_at_exit, 1)`` — the instantaneous active count at
 switch-out, including the exiting worker — in *every* backend (the numpy
@@ -332,14 +341,235 @@ def _compute_pallas(log: EventLog) -> CMetricResult:
     return ops.compute_pallas(log)
 
 
+# ---------------------------------------------------------------------------
+# carry-resumable chunked fold
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FoldCarry:
+    """The paper's Table-1 eBPF-map state, as the carry of a chunked fold.
+
+    ``fold_chunk(carry, chunk)`` advances this state by one batch of events
+    and emits the batch's completed timeslices; replaying any partition of a
+    log through it reproduces the whole-log result — bit-equal to
+    :func:`compute_numpy` for the float64 ``numpy`` chunk backend (every
+    accumulation is kept strictly sequential: ``np.add.accumulate`` seeded
+    with the carried scalar, ``np.add.at`` into the carried per-worker
+    hash), within float32 tolerance for the device backends.
+
+    Fields mirror the eBPF maps: ``global_cm`` (running Σ T_i/n_i), ``idle``
+    (time with zero active workers), ``thread_count``, per-worker
+    ``local_cm``/``slice_start`` snapshots taken at switch-in, the ``open``
+    mask (which workers are mid-timeslice at the chunk boundary),
+    ``cm_hash`` (cumulative per-worker CMetric), and the clock state
+    ``t0_ns`` (stream epoch) / ``t_switch_s`` (rebased time of the previous
+    event, the paper's ``t_switch``).
+    """
+
+    num_workers: int
+    t0_ns: int | None = None
+    t_last_ns: int | None = None
+    t_switch_s: float = 0.0
+    global_cm: float = 0.0
+    idle: float = 0.0
+    thread_count: int = 0
+    local_cm: np.ndarray = None
+    slice_start: np.ndarray = None
+    open: np.ndarray = None
+    cm_hash: np.ndarray = None
+    events: int = 0
+    slices: int = 0
+
+    def __post_init__(self):
+        w = self.num_workers
+        if self.local_cm is None:
+            self.local_cm = np.zeros(w)
+        if self.slice_start is None:
+            self.slice_start = np.zeros(w)
+        if self.open is None:
+            self.open = np.zeros(w, bool)
+        if self.cm_hash is None:
+            self.cm_hash = np.zeros(w)
+
+    @classmethod
+    def init(cls, num_workers: int) -> "FoldCarry":
+        return cls(num_workers=num_workers)
+
+    def ensure_workers(self, num_workers: int) -> None:
+        """Grow the per-worker maps (workers may register mid-stream)."""
+        w = self.num_workers
+        if num_workers <= w:
+            return
+        pad = num_workers - w
+        self.local_cm = np.concatenate([self.local_cm, np.zeros(pad)])
+        self.slice_start = np.concatenate([self.slice_start, np.zeros(pad)])
+        self.open = np.concatenate([self.open, np.zeros(pad, bool)])
+        self.cm_hash = np.concatenate([self.cm_hash, np.zeros(pad)])
+        self.num_workers = num_workers
+
+    @property
+    def total_time(self) -> float:
+        return self.t_switch_s
+
+    @property
+    def per_worker(self) -> np.ndarray:
+        return self.cm_hash
+
+
+def _prefix_exact(carry: FoldCarry, contrib, idle_contrib):
+    """Strictly sequential float64 prefix — bit-equal to the numpy oracle's
+    ``gcm += dt / count`` loop (``np.add.accumulate`` is left-to-right)."""
+    g = np.add.accumulate(np.concatenate(([carry.global_cm], contrib)))[1:]
+    idle = np.add.accumulate(
+        np.concatenate(([carry.idle], idle_contrib)))[-1]
+    return g, float(idle)
+
+
+def _prefix_f32_seq(carry: FoldCarry, contrib, idle_contrib):
+    """Sequential float32 prefix (the streaming scan's arithmetic)."""
+    g = np.add.accumulate(np.concatenate(
+        ([carry.global_cm], contrib)).astype(np.float32))[1:]
+    idle = np.add.accumulate(np.concatenate(
+        ([carry.idle], idle_contrib)).astype(np.float32))[-1]
+    return g.astype(np.float64), float(idle)
+
+
+@jax.jit
+def _cumsum_prefix_f32(g0, i0, contrib, idle_contrib):
+    return g0 + jnp.cumsum(contrib), i0 + jnp.sum(idle_contrib)
+
+
+def _prefix_vector(carry: FoldCarry, contrib, idle_contrib):
+    """Data-parallel float32 prefix (jitted cumsum on device)."""
+    g, idle = _cumsum_prefix_f32(jnp.float32(carry.global_cm),
+                                 jnp.float32(carry.idle),
+                                 jnp.asarray(contrib, jnp.float32),
+                                 jnp.asarray(idle_contrib, jnp.float32))
+    return np.asarray(g, np.float64), float(idle)
+
+
+def _prefix_pallas(carry: FoldCarry, contrib, idle_contrib):
+    # Lazy import as for _compute_pallas.
+    from repro.kernels import ops
+    return ops.fold_chunk_prefix(carry.global_cm, carry.idle, contrib,
+                                 idle_contrib)
+
+
+def _fold_chunk(carry: FoldCarry, log: EventLog, prefix) -> tuple[
+        FoldCarry, SliceTable]:
+    """Advance ``carry`` over one time-sorted, sanitized chunk.
+
+    The chunk must be consistent with ``carry.open`` (use
+    :func:`repro.core.events.sanitize_chunk` on dirty streams first) and
+    start at or after ``carry.t_last_ns``.  Returns the same carry object,
+    updated, plus one :class:`SliceTable` row per DEACTIVATE in the chunk
+    (in event order, like every backend).
+    """
+    carry.ensure_workers(log.num_workers)
+    e = len(log)
+    if e == 0:
+        return carry, SliceTable.empty()
+    if carry.t0_ns is None:
+        carry.t0_ns = int(log.times[0])
+        carry.t_last_ns = carry.t0_ns      # first dt is 0, like the oracle
+    t = (log.times - carry.t0_ns).astype(np.float64) * 1e-9
+    w = log.workers
+    d = log.deltas
+    dt = np.empty(e, np.float64)
+    dt[0] = t[0] - carry.t_switch_s
+    dt[1:] = t[1:] - t[:-1]
+    d64 = d.astype(np.int64)
+    n_before = carry.thread_count + np.cumsum(d64) - d64
+    pos_mask = n_before > 0
+    contrib = np.where(pos_mask, dt / np.maximum(n_before, 1), 0.0)
+    idle_contrib = np.where(pos_mask, 0.0, dt)
+    g, idle_end = prefix(carry, contrib, idle_contrib)
+
+    # -- pairing: each DEACTIVATE matches the previous event of its worker
+    # group (alternation holds within a sanitized chunk) or the carry.
+    idx = np.arange(e)
+    order = np.argsort(w, kind="stable")
+    ws = w[order]
+    ds = d[order]
+    firstg = np.concatenate([[True], ws[1:] != ws[:-1]])
+    grp_first = np.maximum.accumulate(np.where(firstg, idx, 0))
+    pos = idx - grp_first
+    out_sorted = ds == DEACTIVATE
+    out_global = order[out_sorted]
+    has_prev = (pos > 0)[out_sorted]
+    prev_global = order[np.maximum(idx - 1, 0)][out_sorted]
+    w_out = ws[out_sorted]
+    local = np.where(has_prev, g[prev_global], carry.local_cm[w_out])
+    start_s = np.where(has_prev, t[prev_global],
+                       carry.slice_start[w_out])
+    slice_cm = g[out_global] - local
+    end_s = t[out_global]
+    dur = end_s - start_s
+    n_exit = n_before[out_global]          # includes the exiting worker
+    threads_av = np.where(
+        slice_cm > 0, dur / np.where(slice_cm > 0, slice_cm, 1.0),
+        np.maximum(n_exit, 1).astype(np.float64))
+
+    # restore event (time) order, the order every backend emits slices in
+    ord2 = np.argsort(out_global, kind="stable")
+    w_out = w_out[ord2]
+    out_eo = out_global[ord2]
+    slice_cm = slice_cm[ord2]
+    # sequential per-worker accumulation into the carried hash — the exact
+    # order the oracle's ``cm[wi] += slice_cm`` runs in
+    np.add.at(carry.cm_hash, w_out, slice_cm)
+    table = SliceTable.from_arrays(
+        worker=w_out,
+        start_ns=carry.t0_ns + np.round(
+            start_s[ord2] * 1e9).astype(np.int64),
+        end_ns=carry.t0_ns + np.round(end_s[ord2] * 1e9).astype(np.int64),
+        cm=slice_cm,
+        threads_av=threads_av[ord2],
+        stack_id=log.stacks[out_eo],
+        n_at_exit=n_exit[ord2],
+    )
+
+    # -- carry update: per-worker last event decides the open snapshot
+    lastg = np.concatenate([ws[1:] != ws[:-1], [True]])
+    wl = ws[lastg]
+    dl = ds[lastg]
+    li = order[lastg]
+    act = dl == ACTIVATE
+    carry.local_cm[wl[act]] = g[li[act]]
+    carry.slice_start[wl[act]] = t[li[act]]
+    carry.open[wl] = act
+    carry.thread_count += int(d64.sum())
+    carry.global_cm = float(g[-1])
+    carry.idle = idle_end
+    carry.t_switch_s = float(t[-1])
+    carry.t_last_ns = int(log.times[-1])
+    carry.events += e
+    carry.slices += int(len(table))
+    return carry, table
+
+
+def fold_chunk(carry: FoldCarry, log: EventLog,
+               backend: str = "numpy") -> tuple[FoldCarry, SliceTable]:
+    """Dispatch one chunk through the named backend's chunk fold."""
+    return backends_lib.fold_chunk(carry, log, backend=backend)
+
+
+def _make_fold_chunk(prefix):
+    return functools.partial(_fold_chunk, prefix=prefix)
+
+
 register_backend("numpy", compute_numpy,
-                 capabilities={"oracle", "float64", "exact"})
+                 capabilities={"oracle", "float64", "exact"},
+                 fold_chunk=_make_fold_chunk(_prefix_exact))
 register_backend("stream", compute_streaming,
-                 capabilities={"device", "sequential", "paper-faithful"})
+                 capabilities={"device", "sequential", "paper-faithful"},
+                 fold_chunk=_make_fold_chunk(_prefix_f32_seq))
 register_backend("vector", compute_vectorized,
-                 capabilities={"device", "parallel"})
+                 capabilities={"device", "parallel"},
+                 fold_chunk=_make_fold_chunk(_prefix_vector))
 register_backend("pallas", _compute_pallas,
-                 capabilities={"device", "parallel", "fused", "tpu"})
+                 capabilities={"device", "parallel", "fused", "tpu"},
+                 fold_chunk=_make_fold_chunk(_prefix_pallas))
 
 
 def compute(log: EventLog, backend: str = "numpy") -> CMetricResult:

@@ -275,25 +275,24 @@ def detect(
     samples: SampleBuffer | None = None,
     top_n: int = 10,
 ) -> BottleneckReport:
-    """Live-mode detection straight from the tracer's online state."""
+    """Live-mode detection from the tracer's batched online state (one
+    ``snapshot()``: pending shard events are drained and folded once, and
+    every reported number comes from the same sync point)."""
     n_min = tracer._resolved_n_min()
-    crit = tracer.critical.table()
+    snap = tracer.snapshot()
+    crit = snap["critical"]
     paths_all, _ = merge_table(crit, samples, tracer.stacks, n_min)
     paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
-    log_len = min(tracer.ring.head, tracer.ring.capacity)
-    total_slices = int(np.sum(
-        tracer.ring.deltas[:log_len] == -1)) if log_len else 0
     return BottleneckReport(
         paths=paths,
-        per_worker=tracer.per_worker_cm(),
+        per_worker=snap["per_worker"],
         worker_names=tracer.worker_names(),
         tag_names=list(tracer.tags.names),
         tag_locations=list(tracer.tags.locations),
         total_critical=len(crit),
-        total_slices=total_slices,
-        idle_time=tracer.idle_time,
-        total_time=((tracer.t_switch - tracer.t_first) * 1e-9
-                    if tracer.t_first is not None else 0.0),
+        total_slices=snap["total_slices"],
+        idle_time=snap["idle_time"],
+        total_time=snap["total_time"],
         critical_table=crit,
     )
 
@@ -308,6 +307,7 @@ def detect_offline(
     backend: str = "numpy",
     top_n: int = 10,
     worker_names: list[str] | None = None,
+    chunk_events: int | None = None,
 ) -> BottleneckReport:
     """Offline pipeline: recompute CMetric from a raw event log with any
     registered backend (numpy / stream / vector / pallas), optionally
@@ -317,12 +317,43 @@ def detect_offline(
     Raw logs are sanitized first (spurious double-ACTIVATE / unmatched
     DEACTIVATE are dropped exactly as the live tracer would), so adversarial
     streams produce the same report on every backend.
+
+    ``chunk_events`` streams the fold: the log is pushed through the
+    backend's carry-resumable ``fold_chunk`` in batches of that many
+    events, sanitizing each chunk with carried per-worker state, and only
+    the *critical* slice rows are retained between chunks — so arbitrarily
+    long logs profile in memory bounded by the chunk size plus the critical
+    set.  Results are identical to the whole-log path (bit-equal for the
+    float64 ``numpy`` backend).
     """
-    log = log.sanitize()
-    res = backends_lib.compute(log, backend=backend)
-    if samples is None and sample_dt_ns is not None:
-        samples = simulate_samples(log, sample_dt_ns, n_min)
-    crit = res.critical_table(n_min)
+    if chunk_events is not None and len(log):
+        from repro.core.cmetric import FoldCarry
+        from repro.core.events import sanitize_chunk
+        carry = FoldCarry.init(log.num_workers)
+        crit_parts = []
+        for lo in range(0, len(log), chunk_events):
+            part = log.chunk(lo, lo + chunk_events)
+            # carry.open is the Table-1 per-worker state: sanitize against
+            # it, and the fold advances it after consuming the clean chunk
+            part, _, _ = sanitize_chunk(part, carry.open)
+            carry, tbl = backends_lib.fold_chunk(carry, part,
+                                                 backend=backend)
+            ct = tbl.critical(n_min)
+            if len(ct):
+                crit_parts.append(ct)
+        crit = SliceTable.concat(crit_parts)
+        per_worker, idle, total = carry.per_worker, carry.idle, carry.total_time
+        num_slices = carry.slices
+        if samples is None and sample_dt_ns is not None:
+            samples = simulate_samples(log.sanitize(), sample_dt_ns, n_min)
+    else:
+        log = log.sanitize()
+        res = backends_lib.compute(log, backend=backend)
+        if samples is None and sample_dt_ns is not None:
+            samples = simulate_samples(log, sample_dt_ns, n_min)
+        crit = res.critical_table(n_min)
+        per_worker, idle, total = res.per_worker, res.idle_time, res.total_time
+        num_slices = res.num_slices
     caps = backends_lib.get_backend(backend).capabilities
     paths_all, _ = merge_table(crit, samples, stacks, n_min,
                                use_pallas_hist="fused" in caps
@@ -330,14 +361,14 @@ def detect_offline(
     paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
     return BottleneckReport(
         paths=paths,
-        per_worker=res.per_worker,
+        per_worker=per_worker,
         worker_names=worker_names or [f"w{i}" for i in range(log.num_workers)],
         tag_names=list(tags.names),
         tag_locations=list(tags.locations),
         total_critical=len(crit),
-        total_slices=res.num_slices,
-        idle_time=res.idle_time,
-        total_time=res.total_time,
+        total_slices=num_slices,
+        idle_time=idle,
+        total_time=total,
         critical_table=crit,
     )
 

@@ -26,10 +26,13 @@ from repro.core.tracer import StackRegistry, TagRegistry, Tracer
 
 class Gapp:
     def __init__(self, n_min: float | None = None, dt: float = 0.003,
-                 top_m: int = 8, top_n: int = 10, capacity: int = 1 << 20,
-                 clock=None):
+                 top_m: int = 8, top_n: int = 10, capacity: int = 1 << 16,
+                 clock=None, fold_backend: str = "numpy",
+                 autoflush: bool = True):
+        # capacity is per worker shard (see Tracer)
         kwargs = {} if clock is None else {"clock": clock}
         self.tracer = Tracer(n_min=n_min, top_m=top_m, capacity=capacity,
+                             fold_backend=fold_backend, autoflush=autoflush,
                              **kwargs)
         self.probe = SamplingProbe(self.tracer, dt=dt, n_min=n_min)
         self.top_n = top_n
@@ -37,6 +40,10 @@ class Gapp:
     # --- worker / span API (delegates) ------------------------------------
     def register_worker(self, name: str, kind: str = "thread") -> int:
         return self.tracer.register_worker(name, kind)
+
+    def handle(self, wid: int):
+        """The worker's lock-free probe endpoint (hot-path begin/end)."""
+        return self.tracer.handle(wid)
 
     def span(self, wid: int, tag: str):
         return self.tracer.span(wid, tag)
@@ -84,17 +91,21 @@ class Gapp:
 
     def offline_report(self, backend: str = "vector",
                        sample_dt_ns: int | None = None,
-                       top_n: int | None = None
+                       top_n: int | None = None,
+                       chunk_events: int | None = None
                        ) -> detector_lib.BottleneckReport:
-        """Recompute the profile offline from the ring buffer with any
+        """Recompute the profile offline from the accumulated log with any
         registered backend (cross-validates the online numbers; the vector/
-        pallas paths are the fleet-scale post-processing route)."""
+        pallas paths are the fleet-scale post-processing route).
+        ``chunk_events`` streams the fold in bounded memory via the
+        carry-resumable ``fold_chunk``."""
         return detector_lib.detect_offline(
             self.freeze(), self.tracer.tags, self.tracer.stacks,
             self.tracer._resolved_n_min(), samples=self.probe.buffer
             if len(self.probe.buffer) else None, sample_dt_ns=sample_dt_ns,
             backend=backend, top_n=top_n or self.top_n,
-            worker_names=self.tracer.worker_names())
+            worker_names=self.tracer.worker_names(),
+            chunk_events=chunk_events)
 
 
 def profile_log(

@@ -8,6 +8,11 @@ detector (the paper's single eBPF circular buffer).
 
 The conditional is what keeps overhead negligible: during healthy, fully
 parallel execution the probe wakes, reads one int, and goes back to sleep.
+Both reads are lock-free against the sharded tracer: ``thread_count`` is
+derived from each shard's last published event and ``active_tags`` peeks the
+workers' immutable cons-chain tag stacks, so a probe firing never blocks —
+and never delays — a worker's span hot path (the seed took the tracer's
+global lock here, serializing the sampler against every begin/end).
 """
 from __future__ import annotations
 

@@ -176,6 +176,26 @@ class CriticalBuffer:
             col[i] = v
         self._len = i + 1
 
+    def extend_table(self, table: SliceTable,
+                     mask: np.ndarray | None = None) -> None:
+        """Bulk-append ``table`` rows (optionally only where ``mask``) —
+        one vectorised copy per column, used by the tracer's batched flush
+        instead of a per-slice Python loop."""
+        src = table.filter(mask) if mask is not None else table
+        s = len(src)
+        if s == 0:
+            return
+        while self._len + s > self._cap:
+            self._grow()
+        lo = self._len
+        for col, name in zip(self._cols, _COLUMNS):
+            col[lo:lo + s] = getattr(src, name)
+        self._len = lo + s
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self._cols)
+
     def table(self) -> SliceTable:
         # snapshot length and column list once: a concurrent append (live
         # tracer threads) past this point can't misalign the returned view,

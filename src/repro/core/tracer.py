@@ -1,8 +1,25 @@
 """Runtime tracer — the software analogue of GAPP's kernel probes.
 
-The tracer plays the role of the eBPF ``sched_switch`` probe: every span
-begin/end is a state-change event, and the probe body maintains *exactly* the
-eBPF maps of paper Table 1, online, in O(1) per event:
+The probe path is **sharded and lock-free**: every worker owns a private
+capture shard (:class:`~repro.core.events.EventShard`) and ``begin``/``end``
+append ``(timestamp, meta)`` to it with no cross-worker lock, no numpy row
+stores, no dict updates and no stack interning — the per-event cost is a
+clock read plus two deque appends.  This mirrors the paper's design rule
+that the in-kernel probe body must be O(1) and tiny (§3, Table 2): the seed
+implementation serialized every event of every worker through one global
+``threading.Lock`` plus Python-dict eBPF-map updates, which made the
+profiler itself the serialization bottleneck it is meant to detect (that
+probe body is retained below as :class:`LockedTracer`, the measured
+baseline and semantic oracle).
+
+The expensive part — maintaining the paper's Table-1 eBPF-map state — is
+deferred and batched: a flush drains all shards
+(:meth:`~repro.core.events.ShardedEventRing.drain` k-way-merges them by
+timestamp), applies the §3.2 tolerance rules vectorised
+(:func:`~repro.core.events.tolerance_keep`), and replays the batch through
+the carry-resumable vectorised fold
+(:func:`~repro.core.cmetric.fold_chunk`), whose
+:class:`~repro.core.cmetric.FoldCarry` is exactly the Table-1 state:
 
     global_cm     running Σ T_i / n_i                      (global scalar)
     local_cm[w]   global_cm snapshot at switch-in          (per-worker)
@@ -11,13 +28,22 @@ eBPF maps of paper Table 1, online, in O(1) per event:
     cm_hash[w]    cumulative CMetric per worker            (global hash)
     t_switch      timestamp of the previous event          (local scalar)
 
-As in the paper, call paths are captured **only** when a finished timeslice is
-critical (``threads_av < n_min``) — the key low-overhead design rule — and raw
-events additionally go to a ring buffer so the offline backends (streaming /
-vectorised / Pallas) can recompute and cross-validate the online numbers.
+Flushes run at sync points (``freeze``/``per_worker_cm``/``report``/…)
+and opportunistically when a shard fills (``autoflush``); with the
+``numpy`` fold backend the online state is *bit-identical* to
+``compute_numpy`` over the frozen log.
 
-Workers are *logical*: host threads, DP hosts, pipeline stages, MoE experts.
-``register_worker`` mirrors the paper's ``task_newtask`` probe.
+Call paths are captured as immutable cons chains (``(tag_id, parent)``)
+so ``end`` records the whole stack by reference in O(1); they are
+unwound and interned **only** when the finished timeslice is critical
+(``threads_av < n_min``) — the paper's §4.2 "stacks only for critical
+slices" rule, now enforced end-to-end (non-critical ends allocate no
+stack ids at all).
+
+Workers are *logical*: host threads, DP hosts, pipeline stages, MoE
+experts.  ``register_worker`` mirrors the paper's ``task_newtask`` probe.
+Each worker's handle must be driven by one thread at a time (the shard is
+single-writer); distinct workers never contend.
 """
 from __future__ import annotations
 
@@ -30,7 +56,10 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.core.events import ACTIVATE, DEACTIVATE, NO_STACK, NO_TAG, EventLog, EventRing
+from repro.core import backends as backends_lib
+from repro.core.events import (ACTIVATE, DEACTIVATE, NO_STACK, NO_TAG,
+                               EventLog, EventRing, EventStore,
+                               ShardedEventRing, tolerance_keep)
 from repro.core.slices import CriticalBuffer, CriticalSlice  # noqa: F401 (re-export)
 
 
@@ -58,9 +87,9 @@ class TagRegistry:
             tid = self._ids.get(tag)
             if tid is None:
                 tid = len(self.names)
-                self._ids[tag] = tid
                 self.names.append(tag)
                 self.locations.append(location or "<unknown>")
+                self._ids[tag] = tid   # publish last: readers skip the lock
         return tid
 
     def __len__(self) -> int:
@@ -85,28 +114,413 @@ class StackRegistry:
             sid = self._ids.get(stack)
             if sid is None:
                 sid = len(self.paths)
-                self._ids[stack] = sid
                 self.paths.append(stack)
+                self._ids[stack] = sid
         return sid
+
+    def intern_cons(self, cons) -> int:
+        """Intern a captured cons-chain stack (head = top of stack)."""
+        items = []
+        while cons is not None:
+            items.append(cons[0])
+            cons = cons[1]
+        items.reverse()                    # caller -> callee, like the seed
+        return self.intern(tuple(items))
 
     def __len__(self) -> int:
         return len(self.paths)
 
 
+class WorkerHandle:
+    """One worker's lock-free probe endpoint.
+
+    ``begin``/``end`` are closures bound to the worker's shard (built in
+    :meth:`Tracer.register_worker`); calling them through the handle is the
+    hot path — :meth:`Tracer.begin`/:meth:`Tracer.end` are thin compat
+    wrappers.  ``stack`` is the live tag stack as an immutable cons chain
+    ``(tag_id, parent)`` (``None`` when empty), so the sampler can read the
+    top frame and ``end`` can capture the whole path by reference without
+    copying.  Single-writer: one thread drives a handle at a time.
+    """
+
+    __slots__ = ("wid", "name", "kind", "shard", "stack", "begin", "end")
+
+    def __init__(self, wid: int, name: str, kind: str, shard):
+        self.wid = wid
+        self.name = name
+        self.kind = kind
+        self.shard = shard
+        self.stack = None
+
+    @contextlib.contextmanager
+    def span(self, tag: str) -> Iterator[None]:
+        self.begin(tag)
+        try:
+            yield
+        finally:
+            self.end()
+
+
 class Tracer:
-    """Low-overhead span tracer with online CMetric (the kernel-probe body)."""
+    """Sharded low-overhead span tracer with batched online CMetric.
+
+    ``capacity`` is per worker shard.  ``fold_backend`` selects the
+    registered chunk fold that maintains the online state (``"numpy"`` is
+    the bit-exact float64 default); ``autoflush=False`` disables the
+    opportunistic flush when a shard fills, so a full shard drops new
+    events (counted) like a BPF ring buffer.
+    """
+
+    def __init__(self, n_min: float | None = None, top_m: int = 8,
+                 capacity: int = 1 << 16, clock=time.perf_counter_ns,
+                 fold_backend: str = "numpy", autoflush: bool = True):
+        self.n_min = n_min              # None => total_count/2, resolved lazily
+        self.clock = clock
+        self.fold_backend = fold_backend
+        self.autoflush = autoflush
+        self.tags = TagRegistry()
+        self.stacks = StackRegistry(top_m)
+        self.ring = ShardedEventRing(capacity)
+        self.workers: list[WorkerInfo] = []
+        self._handles: list[WorkerHandle] = []
+        # Table-1 eBPF-map state lives in the fold carry; it advances only
+        # at flush time, by replaying drained batches through fold_chunk.
+        from repro.core.cmetric import FoldCarry  # deferred: import cycle
+        self._carry = FoldCarry.init(0)
+        self._store = EventStore()
+        self._critical = CriticalBuffer()
+        self._total_slices = 0
+        # events removed by the §3.2 tolerance filter at flush time (e.g.
+        # the orphaned end of a span whose begin was ring-dropped): the full
+        # accounting is appended == len(freeze()) + ring.dropped + this
+        self.tolerance_dropped = 0
+        self._fold_lock = threading.Lock()     # flush/drain consumer lock
+        self._reg_lock = threading.Lock()
+        self.enabled = True
+
+    # -- task_newtask analogue ----------------------------------------------
+    def register_worker(self, name: str, kind: str = "thread") -> int:
+        with self._reg_lock:
+            wid = len(self.workers)
+            shard = self.ring.add_shard()
+            h = WorkerHandle(wid, name, kind, shard)
+            h.begin, h.end = self._make_hot_path(h, shard)
+            self.workers.append(WorkerInfo(wid, name, kind))
+            self._handles.append(h)
+        return wid
+
+    def handle(self, wid: int) -> WorkerHandle:
+        """The worker's lock-free probe endpoint (the actual hot path)."""
+        return self._handles[wid]
+
+    def _make_hot_path(self, h: WorkerHandle, shard):
+        """Build the two per-event closures.  Everything they touch is a
+        local cell: the tag dict, the clock, the shard deques.  No locks,
+        no numpy, no interning — decode happens at drain time."""
+        ids = self.tags._ids
+        clock = self.clock
+        ta = shard.times.append
+        ma = shard.metas.append
+        md = shard.metas
+        cap = shard.capacity
+        dlen = len
+        slow = self._append_slow
+        intern_cold = self._intern_at_callsite
+
+        def begin(tag, location=None):
+            try:
+                tid = ids[tag]
+            except KeyError:
+                tid = intern_cold(tag, location)
+            h.stack = (tid, h.stack)
+            if dlen(md) >= cap and not slow(shard):
+                return tid
+            ta(clock())
+            ma(tid)                       # int meta == ACTIVATE
+            return tid
+
+        def end():
+            s = h.stack                   # captured path, by reference
+            if s is not None:
+                h.stack = s[1]
+            if dlen(md) >= cap and not slow(shard):
+                return
+            ta(clock())
+            ma(s)                         # cons/None meta == DEACTIVATE
+
+        return begin, end
+
+    def _intern_at_callsite(self, tag: str, location: str | None) -> int:
+        """Cold path of tag interning: runs once per distinct tag, so it can
+        afford the frame walk the seed paid on every single begin()."""
+        if location is None:
+            f = sys._getframe(2)
+            # walk out of the tracer and contextlib frames (span() enters
+            # through the @contextmanager machinery) to the user call site
+            while f is not None and f.f_globals.get("__name__") in (
+                    __name__, "contextlib"):
+                f = f.f_back
+            if f is not None:
+                location = f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}"
+        return self.tags.intern(tag, location)
+
+    def _append_slow(self, shard) -> bool:
+        """A shard hit capacity: try a non-blocking flush, then either admit
+        the event or drop it (counted, BPF ringbuf semantics)."""
+        if self.autoflush and self._fold_lock.acquire(False):
+            try:
+                self._flush_locked()
+            finally:
+                self._fold_lock.release()
+        if len(shard.metas) >= shard.capacity:
+            shard.dropped += 1
+            return False
+        return True
+
+    @property
+    def total_count(self) -> int:
+        return len(self.workers)
+
+    def _resolved_n_min(self) -> float:
+        return self.n_min if self.n_min is not None else self.total_count / 2
+
+    # -- batched probe analysis (the deferred Table-1 state machine) ---------
+    def sync(self) -> None:
+        """Drain all shards and replay the batch through the vectorised
+        chunk fold, advancing the online CMetric/critical-slice state."""
+        with self._fold_lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        chunk = self.ring.drain()
+        # total_count *after* the drain: a worker that registered while we
+        # drained may already have events in the chunk, and every map below
+        # must cover its id
+        w_count = self.total_count
+        carry = self._carry
+        carry.ensure_workers(w_count)
+        if chunk is None:
+            return
+        times = chunk.times
+        workers = chunk.workers
+        deltas = chunk.deltas
+        tags = chunk.tags
+        aux = chunk.aux
+        # Cross-flush monotonic repair: a producer preempted between its
+        # clock read and its publish can surface an event older than the
+        # already-folded watermark; clamping keeps the accumulated log
+        # time-sorted (the error is bounded by the preemption window).
+        if carry.t_last_ns is not None and times[0] < carry.t_last_ns:
+            times = np.maximum(times, carry.t_last_ns)
+        # §3.2 tolerance, applied vectorised against the carry's open mask —
+        # the fold updates it identically after consuming the clean chunk,
+        # so the Table-1 carry is the single source of the per-worker state
+        keep, _ = tolerance_keep(workers, deltas, carry.open)
+        if not keep.all():
+            self.tolerance_dropped += int(keep.size - keep.sum())
+            times, workers, deltas, tags, aux = (
+                times[keep], workers[keep], deltas[keep], tags[keep],
+                aux[keep])
+        if times.shape[0] == 0:
+            return
+        stacks_col = np.full(times.shape[0], NO_STACK, np.int32)
+        clog = EventLog(times, workers, deltas, tags, stacks_col, w_count)
+        self._carry, table = backends_lib.fold_chunk(
+            carry, clog, backend=self.fold_backend)
+        # §4.2: intern call paths for critical timeslices only
+        crit_mask = table.threads_av < self._resolved_n_min()
+        if crit_mask.any():
+            deact_pos = np.flatnonzero(deltas == DEACTIVATE)
+            aux_out = aux[deact_pos]
+            intern_cons = self.stacks.intern_cons
+            for r in np.flatnonzero(crit_mask):
+                sid = intern_cons(aux_out[r])
+                table.stack_id[r] = sid
+                stacks_col[deact_pos[r]] = sid
+            self._critical.extend_table(table, crit_mask)
+        self._store.append_columns(times, workers, deltas, tags, stacks_col)
+        self._total_slices += len(table)
+
+    # -- public span API (compat wrappers over the handle hot path) ----------
+    def begin(self, wid: int, tag: str, location: str | None = None) -> int:
+        if not self.enabled:
+            return NO_TAG
+        return self._handles[wid].begin(tag, location)
+
+    def end(self, wid: int) -> None:
+        if not self.enabled:
+            return
+        self._handles[wid].end()
+
+    @contextlib.contextmanager
+    def span(self, wid: int, tag: str) -> Iterator[None]:
+        h = self._handles[wid]
+        h.begin(tag)
+        try:
+            yield
+        finally:
+            h.end()
+
+    # Tag refinement inside an active span: adds call-path context without a
+    # scheduling event (the worker stays active).
+    def push(self, wid: int, tag: str) -> None:
+        h = self._handles[wid]
+        h.stack = (self.tags.intern(tag), h.stack)
+
+    def pop(self, wid: int) -> None:
+        h = self._handles[wid]
+        s = h.stack
+        if s is not None:
+            h.stack = s[1]
+
+    @contextlib.contextmanager
+    def frame(self, wid: int, tag: str) -> Iterator[None]:
+        self.push(wid, tag)
+        try:
+            yield
+        finally:
+            self.pop(wid)
+
+    # -- sampling-probe reads (lock-free; see sampler.py) --------------------
+    @property
+    def thread_count(self) -> int:
+        """Instantaneous active-worker count, read off the shards."""
+        return sum(h.shard.is_open for h in self._handles)
+
+    def active_tags(self) -> list[tuple[int, int]]:
+        """(wid, top-of-stack tag) of each active worker — the 'instruction
+        pointer' read.  Lock-free: cons stacks are immutable snapshots."""
+        out = []
+        for h in self._handles:
+            s = h.stack
+            if s is not None and h.shard.is_open:
+                out.append((h.wid, s[0]))
+        return out
+
+    # -- ingestion of external (synthetic / device-side) event streams -------
+    def ingest(self, t: int, wid: int, delta: int, tag: str = "",
+               stack: tuple[str, ...] = ()) -> None:
+        """Feed a pre-timestamped event (simulated fleet trace, device timing
+        stream) into the worker's shard; it flows through the same drain +
+        sanitize + fold pipeline as live spans.  Not a hot path."""
+        h = self._handles[wid]
+        sh = h.shard
+        # the tag stack must mirror the caller's span structure even when
+        # the ring is full — like the hot-path closures, apply the push/pop
+        # unconditionally and drop only the event
+        has_room = (len(sh.metas) < sh.capacity or self._append_slow(sh))
+        if delta == ACTIVATE:
+            tid = self.tags.intern(tag) if tag else NO_TAG
+            h.stack = (tid, h.stack)
+            if has_room:
+                sh.times.append(int(t))
+                sh.metas.append(tid)
+        else:
+            if stack:
+                cons = None
+                for s_ in stack:          # caller->callee in, head=callee out
+                    cons = (self.tags.intern(s_), cons)
+            else:
+                cons = h.stack
+            if has_room:
+                sh.times.append(int(t))
+                sh.metas.append(cons)
+            s = h.stack
+            if s is not None:
+                h.stack = s[1]
+
+    # -- results --------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """One consistent view of the online state under a single sync —
+        what the detector consumes (per-property access would re-sync and
+        could interleave fresh mini-batches between reads)."""
+        with self._fold_lock:
+            self._flush_locked()
+            carry = self._carry
+            per_worker = np.zeros(self.total_count)
+            per_worker[:carry.cm_hash.shape[0]] = \
+                carry.cm_hash[:per_worker.shape[0]]
+            return {
+                "critical": self._critical.table(),
+                "per_worker": per_worker,
+                "total_slices": self._total_slices,
+                "idle_time": carry.idle,
+                "total_time": carry.total_time,
+            }
+
+    @property
+    def critical(self) -> CriticalBuffer:
+        """Online critical slices, columnar (synced on access)."""
+        self.sync()
+        return self._critical
+
+    @property
+    def idle_time(self) -> float:
+        self.sync()
+        return self._carry.idle
+
+    @property
+    def global_cm(self) -> float:
+        self.sync()
+        return self._carry.global_cm
+
+    @property
+    def t_first(self) -> int | None:
+        self.sync()
+        return self._carry.t0_ns
+
+    @property
+    def t_switch(self) -> int | None:
+        self.sync()
+        return self._carry.t_last_ns
+
+    @property
+    def total_slices(self) -> int:
+        self.sync()
+        return self._total_slices
+
+    def freeze(self) -> EventLog:
+        self.sync()
+        return self._store.freeze(self.total_count)
+
+    def per_worker_cm(self) -> np.ndarray:
+        self.sync()
+        out = np.zeros(self.total_count)
+        cm = self._carry.cm_hash
+        out[:cm.shape[0]] = cm[:out.shape[0]]
+        return out
+
+    def worker_names(self) -> list[str]:
+        return [w.name for w in self.workers]
+
+    def memory_bytes(self) -> int:
+        """Profiler-side memory: accumulated log + pending shards + critical
+        buffer (the paper's Table-2 'M' column analogue)."""
+        return (self._store.nbytes + self.ring.approx_nbytes()
+                + self._critical.nbytes)
+
+
+class LockedTracer:
+    """The seed probe body: one global lock + per-event Python map updates.
+
+    Retained verbatim as (a) the measured baseline of the probe
+    microbenchmark (``bench_cmetric`` / ``--smoke probe``) and (b) a
+    semantic oracle for the sharded tracer — both maintain the paper's
+    Table-1 state, one per event under a lock, one batched through the
+    vectorised fold.  Do not use for live profiling: every ``begin``/``end``
+    of every worker serializes on ``_lock``.
+    """
 
     def __init__(self, n_min: float | None = None, top_m: int = 8,
                  capacity: int = 1 << 20, clock=time.perf_counter_ns):
-        self.n_min = n_min              # None => total_count/2, resolved lazily
+        self.n_min = n_min
         self.clock = clock
         self.tags = TagRegistry()
         self.stacks = StackRegistry(top_m)
         self.ring = EventRing(capacity)
         self.workers: list[WorkerInfo] = []
         self._tag_stacks: dict[int, list[int]] = {}
-        self._open: set[int] = set()      # workers with an open slice
-        # eBPF-map state (paper Table 1)
+        self._open: set[int] = set()
         self.global_cm = 0.0
         self.local_cm: dict[int, float] = {}
         self.slice_start: dict[int, int] = {}
@@ -115,13 +529,10 @@ class Tracer:
         self.idle_time = 0.0
         self.t_switch: int | None = None
         self.t_first: int | None = None
-        # online critical slices, stored columnar: .table() hands the whole
-        # buffer to the vectorised detector without a per-slice conversion
         self.critical = CriticalBuffer()
         self._lock = threading.Lock()
         self.enabled = True
 
-    # -- task_newtask analogue ----------------------------------------------
     def register_worker(self, name: str, kind: str = "thread") -> int:
         with self._lock:
             wid = len(self.workers)
@@ -138,7 +549,7 @@ class Tracer:
     def _resolved_n_min(self) -> float:
         return self.n_min if self.n_min is not None else self.total_count / 2
 
-    # -- the sched_switch probe body (call with self._lock held) -------------
+    # the seed sched_switch probe body (call with self._lock held)
     def _event(self, t: int, wid: int, delta: int, tag: int, stack: int) -> None:
         if self.t_first is None:
             self.t_first = t
@@ -171,7 +582,6 @@ class Tracer:
                     threads_av, stack, self.thread_count + 1)
         self.ring.append(t, wid, delta, tag, stack)
 
-    # -- public span API ------------------------------------------------------
     def begin(self, wid: int, tag: str, location: str | None = None) -> int:
         if not self.enabled:
             return NO_TAG
@@ -195,62 +605,34 @@ class Tracer:
 
     @contextlib.contextmanager
     def span(self, wid: int, tag: str) -> Iterator[None]:
-        f = sys._getframe(2)
-        self.begin(wid, tag, f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}")
+        self.begin(wid, tag)
         try:
             yield
         finally:
             self.end(wid)
 
-    # Tag refinement inside an active span: adds call-path context without a
-    # scheduling event (the worker stays active).
-    def push(self, wid: int, tag: str) -> None:
-        tid = self.tags.intern(tag)
-        with self._lock:
-            self._tag_stacks[wid].append(tid)
+    def sync(self) -> None:
+        """No-op: the locked body maintains its state per event."""
 
-    def pop(self, wid: int) -> None:
+    @property
+    def total_slices(self) -> int:
         with self._lock:
-            st = self._tag_stacks[wid]
-            if st:
-                st.pop()
+            n = min(self.ring.head, self.ring.capacity)
+        return int(np.sum(self.ring.deltas[:n] == DEACTIVATE)) if n else 0
 
-    @contextlib.contextmanager
-    def frame(self, wid: int, tag: str) -> Iterator[None]:
-        self.push(wid, tag)
-        try:
-            yield
-        finally:
-            self.pop(wid)
-
-    # -- sampling-probe read: 'instruction pointer' of each active worker ----
-    def active_tags(self) -> list[tuple[int, int]]:
+    def snapshot(self) -> dict:
+        """One consistent view of the online state (single lock hold)."""
         with self._lock:
-            return [(wid, self._tag_stacks[wid][-1])
-                    for wid in self._open if self._tag_stacks.get(wid)]
-
-    # -- ingestion of external (synthetic / device-side) event streams -------
-    def ingest(self, t: int, wid: int, delta: int, tag: str = "",
-               stack: tuple[str, ...] = ()) -> None:
-        """Feed a pre-timestamped event (simulated fleet trace, device timing
-        stream) through the same probe body as live spans."""
-        tid = self.tags.intern(tag) if tag else NO_TAG
-        with self._lock:
-            if delta == ACTIVATE:
-                self._tag_stacks[wid].append(tid)
-                self._event(t, wid, ACTIVATE, tid, NO_STACK)
-            else:
-                st = self._tag_stacks[wid]
-                if stack:
-                    sid = self.stacks.intern(
-                        tuple(self.tags.intern(s) for s in stack))
-                elif st:
-                    sid = self.stacks.intern(tuple(st))
-                else:
-                    sid = NO_STACK
-                self._event(t, wid, DEACTIVATE, tid, sid)
-                if st:
-                    st.pop()
+            n = min(self.ring.head, self.ring.capacity)
+            return {
+                "critical": self.critical.table(),
+                "per_worker": self.per_worker_cm(),
+                "total_slices": int(np.sum(
+                    self.ring.deltas[:n] == DEACTIVATE)) if n else 0,
+                "idle_time": self.idle_time,
+                "total_time": ((self.t_switch - self.t_first) * 1e-9
+                               if self.t_first is not None else 0.0),
+            }
 
     def freeze(self) -> EventLog:
         return self.ring.freeze(self.total_count)

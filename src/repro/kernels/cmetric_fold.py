@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: the CMetric interval fold (paper §4.1 hot loop).
+"""Pallas TPU kernels: the CMetric interval fold (paper §4.1 hot loop).
 
 At fleet scale the profiler ingests tens of millions of events per run
 (every span begin/end across hosts, stages and experts).  The fold below is
@@ -6,16 +6,22 @@ the post-processing hot spot the paper keeps fast ("PPT" column of Table 2):
 for every event we need the active-worker count during the preceding
 interval and the running ``global_cm`` prefix
 
-    n[i]   = Σ_{e<=i} delta[e]
-    gcm[i] = Σ_{e<i}  dt[e] / max(n[e], 1) * (n[e] > 0)
+    n[i]   = n_in  + Σ_{e<=i} delta[e]
+    gcm[i] = gcm_in + Σ_{e<i}  dt[e] / max(n[e], 1) * (n[e] > 0)
 
 i.e. two coupled prefix scans over the event stream.  TPU adaptation: the
 stream is tiled into (1, B) VMEM blocks (B a multiple of 128 lanes); within a
 block the scan is a Hillis–Steele shift-add ladder (log2 B vector steps on
 the VPU); the inter-block carry (running count, running gcm, idle time) lives
 in a small VMEM scratch accumulator that persists across the sequential TPU
-grid.  HBM traffic is exactly 2 input + 2 output streams — the kernel is
+grid.  HBM traffic is exactly 3 input + 2 output streams — the kernel is
 memory-bound by design, matching its roofline on the VPU.
+
+Both kernels are **carry-resumable**: the scan state enters as a small
+``carry0`` input and the final state comes back in the scalars output, so a
+log too large for one call (or one host) streams through in chunks —
+exactly the cross-block carry trick, lifted one level up to cross-call
+(see :class:`repro.core.cmetric.FoldCarry`).
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 LANES = 128
@@ -43,16 +50,18 @@ def _ladder_cumsum(x):
     return x
 
 
-def _fold_kernel(dt_ref, delta_ref, n_ref, gcm_ref, carry_ref, scalars_ref):
+def _fold_kernel(dt_ref, delta_ref, carry0_ref, n_ref, gcm_ref, carry_ref,
+                 scalars_ref):
     """Grid is 1-D over event blocks; TPU executes it sequentially, so the
-    carry scratch implements the cross-block prefix."""
+    carry scratch implements the cross-block prefix.  ``carry0`` seeds the
+    scan (count, gcm, idle) so a chunked caller can resume a prior fold."""
     blk = pl.program_id(0)
 
     @pl.when(blk == 0)
     def _init():
-        carry_ref[0, 0] = 0.0   # running count (as f32; exact for |n| < 2^24)
-        carry_ref[0, 1] = 0.0   # running gcm
-        carry_ref[0, 2] = 0.0   # running idle time
+        carry_ref[0, 0] = carry0_ref[0, 0]   # running count (f32; exact to 2^24)
+        carry_ref[0, 1] = carry0_ref[0, 1]   # running gcm
+        carry_ref[0, 2] = carry0_ref[0, 2]   # running idle time
 
     count_in = carry_ref[0, 0]
     gcm_in = carry_ref[0, 1]
@@ -79,18 +88,24 @@ def _fold_kernel(dt_ref, delta_ref, n_ref, gcm_ref, carry_ref, scalars_ref):
     def _finalize():
         scalars_ref[0, 0] = gcm_in + incl[0, -1]     # total_cm
         scalars_ref[0, 1] = idle_in + idle_blk       # idle
+        scalars_ref[0, 2] = n[0, -1]                 # final count
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def fold(dt, deltas, *, block: int = 2048, interpret: bool = True):
-    """Blocked CMetric fold.  See :func:`repro.kernels.ref.fold_ref`.
+def fold(dt, deltas, carry=None, *, block: int = 2048,
+         interpret: bool = True):
+    """Blocked, carry-resumable CMetric fold.  See
+    :func:`repro.kernels.ref.fold_ref`.
 
     Args:
       dt:     f32[E] interval lengths (last entry 0).
       deltas: i32[E] state-change deltas (+1/-1, 0 padding).
+      carry:  optional (count, gcm, idle) f32 triple resuming a prior call
+              (defaults to a fresh scan).
       block:  events per VMEM tile (power of two, multiple of 128).
 
-    Returns (n i32[E], gcm f32[E], total_cm f32, idle f32).
+    Returns (n i32[E], gcm f32[E], total_cm f32, idle f32, count f32) — the
+    final (total_cm, idle, count) triple is the carry for the next chunk.
     """
     assert block % LANES == 0 and block & (block - 1) == 0, block
     e = dt.shape[0]
@@ -98,6 +113,10 @@ def fold(dt, deltas, *, block: int = 2048, interpret: bool = True):
     dt_p = jnp.pad(dt.astype(jnp.float32), (0, pad)).reshape(1, -1)
     de_p = jnp.pad(deltas.astype(jnp.int32), (0, pad)).reshape(1, -1)
     nblk = dt_p.shape[1] // block
+    if carry is None:
+        carry = (0.0, 0.0, 0.0)
+    carry0 = jnp.zeros((1, LANES), jnp.float32).at[0, :3].set(
+        jnp.asarray(carry, jnp.float32))
 
     n, gcm, _, scalars = pl.pallas_call(
         _fold_kernel,
@@ -105,6 +124,7 @@ def fold(dt, deltas, *, block: int = 2048, interpret: bool = True):
         in_specs=[
             pl.BlockSpec((1, block), lambda i: (0, i)),
             pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),  # carry seed
         ],
         out_specs=[
             pl.BlockSpec((1, block), lambda i: (0, i)),
@@ -119,5 +139,75 @@ def fold(dt, deltas, *, block: int = 2048, interpret: bool = True):
             jax.ShapeDtypeStruct((1, LANES), jnp.float32),
         ],
         interpret=interpret,
-    )(dt_p, de_p)
-    return (n[0, :e], gcm[0, :e], scalars[0, 0], scalars[0, 1])
+    )(dt_p, de_p, carry0)
+    return (n[0, :e], gcm[0, :e], scalars[0, 0], scalars[0, 1],
+            scalars[0, 2])
+
+
+def _cumsum_kernel(contrib_ref, idle_ref, carry0_ref, g_ref, carry_ref,
+                   scalars_ref):
+    """Carry-seeded dual prefix: inclusive cumsum of ``contrib`` (the
+    per-event global_cm contributions, already divided by the active count
+    host-side) plus a running idle total."""
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        carry_ref[0, 0] = carry0_ref[0, 0]   # running gcm
+        carry_ref[0, 1] = carry0_ref[0, 1]   # running idle
+
+    g_in = carry_ref[0, 0]
+    idle_in = carry_ref[0, 1]
+
+    contrib = contrib_ref[...]
+    incl = _ladder_cumsum(contrib)
+    g_ref[...] = g_in + incl                  # inclusive: gcm *at* event i
+    idle_blk = jnp.sum(idle_ref[...])
+
+    carry_ref[0, 0] = g_in + incl[0, -1]
+    carry_ref[0, 1] = idle_in + idle_blk
+
+    @pl.when(blk == pl.num_programs(0) - 1)
+    def _finalize():
+        scalars_ref[0, 0] = g_in + incl[0, -1]
+        scalars_ref[0, 1] = idle_in + idle_blk
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def carry_cumsum(contrib, idle_contrib, carry, *, block: int = 2048,
+                 interpret: bool = True):
+    """Carry-seeded blocked cumsum used by the Pallas chunked fold.
+
+    Returns (g f32[E], gcm_end f32, idle_end f32): ``g[i]`` is the carried
+    gcm value *at* event i (inclusive of event i's contribution).
+    """
+    assert block % LANES == 0 and block & (block - 1) == 0, block
+    e = contrib.shape[0]
+    pad = (-e) % block
+    c_p = jnp.pad(contrib.astype(jnp.float32), (0, pad)).reshape(1, -1)
+    i_p = jnp.pad(idle_contrib.astype(jnp.float32), (0, pad)).reshape(1, -1)
+    nblk = c_p.shape[1] // block
+    carry0 = jnp.zeros((1, LANES), jnp.float32).at[0, :2].set(
+        jnp.asarray(carry, jnp.float32))
+
+    g, _, scalars = pl.pallas_call(
+        _cumsum_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nblk * block), jnp.float32),
+            jax.ShapeDtypeStruct((1, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((1, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c_p, i_p, carry0)
+    return g[0, :e], scalars[0, 0], scalars[0, 1]

@@ -4,25 +4,28 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def fold_ref(dt, deltas):
-    """Reference for the CMetric interval fold.
+def fold_ref(dt, deltas, carry=None):
+    """Reference for the carry-resumable CMetric interval fold.
 
     Args:
       dt:     f32[E] interval lengths; ``dt[i] = t[i+1]-t[i]`` (last entry 0).
       deltas: i32[E] +1 activate / -1 deactivate (0 allowed for padding).
+      carry:  optional (count, gcm, idle) triple resuming a prior fold.
 
     Returns:
       n:        i32[E] active-worker count during interval i (after event i)
       gcm:      f32[E] global_cm value when event i fires (exclusive prefix)
       total_cm: f32[]  final global_cm
       idle:     f32[]  total time with n == 0
+      count:    f32[]  final active-worker count (the next chunk's carry)
     """
-    n = jnp.cumsum(deltas.astype(jnp.int32))
+    c0, g0, i0 = (0.0, 0.0, 0.0) if carry is None else carry
+    n = jnp.cumsum(deltas.astype(jnp.int32)) + jnp.int32(c0)
     contrib = jnp.where(n > 0, dt / jnp.maximum(n, 1).astype(dt.dtype), 0.0)
     incl = jnp.cumsum(contrib)
-    gcm = incl - contrib                     # exclusive prefix
-    idle = jnp.sum(jnp.where((n <= 0) & (dt > 0), dt, 0.0))
-    return n, gcm, incl[-1], idle
+    gcm = g0 + incl - contrib                # exclusive prefix
+    idle = i0 + jnp.sum(jnp.where((n <= 0) & (dt > 0), dt, 0.0))
+    return n, gcm, g0 + incl[-1], idle, n[-1].astype(jnp.float32)
 
 
 def hist_ref(tags, num_bins: int):

@@ -23,17 +23,18 @@ def test_fold_shapes(e, block):
     deltas = np.abs(deltas) * (np.cumsum(deltas) > -5) * deltas
     t = np.sort(rng.random(e)).astype(np.float32)
     dt = np.concatenate([np.diff(t), [0.0]]).astype(np.float32)
-    n_r, g_r, tot_r, idle_r = ref.fold_ref(jnp.asarray(dt),
-                                           jnp.asarray(deltas))
-    n_k, g_k, tot_k, idle_k = ops.cmetric_fold(jnp.asarray(t),
-                                               jnp.asarray(deltas),
-                                               block=block)
+    n_r, g_r, tot_r, idle_r, cnt_r = ref.fold_ref(jnp.asarray(dt),
+                                                  jnp.asarray(deltas))
+    n_k, g_k, tot_k, idle_k, cnt_k = ops.cmetric_fold(jnp.asarray(t),
+                                                      jnp.asarray(deltas),
+                                                      block=block)
     np.testing.assert_array_equal(np.asarray(n_r), np.asarray(n_k))
     np.testing.assert_allclose(np.asarray(g_r), np.asarray(g_k), rtol=1e-5,
                                atol=1e-7)
     np.testing.assert_allclose(float(tot_r), float(tot_k), rtol=1e-5)
     np.testing.assert_allclose(float(idle_r), float(idle_k), rtol=1e-5,
                                atol=1e-7)
+    assert float(cnt_r) == float(cnt_k) == float(np.sum(deltas))
 
 
 @settings(max_examples=20, deadline=None)
@@ -78,3 +79,46 @@ def test_fold_large_stream_blocked_equals_unblocked():
     for a, b in zip(outs[0], outs[1]):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                    atol=1e-7)
+
+
+def test_fold_kernel_carry_resume_equals_whole():
+    """The fold kernel's (count, gcm, idle) carry stitches two calls into
+    the same scan as one whole-stream call — the cross-call analogue of its
+    cross-block VMEM carry."""
+    import sys
+    import repro.kernels.cmetric_fold  # noqa: F401 (shadowed by the fn)
+    fk = sys.modules["repro.kernels.cmetric_fold"]
+    rng = np.random.default_rng(2)
+    e, cut = 1500, 700
+    deltas = rng.choice([-1, 1], size=e).astype(np.int32)
+    deltas = np.abs(deltas) * (np.cumsum(deltas) > -5) * deltas
+    t = np.sort(rng.random(e)).astype(np.float32)
+    dt = np.concatenate([np.diff(t), [0.0]]).astype(np.float32)
+    n_a, g_a, tot_a, idle_a, cnt_a = fk.fold(jnp.asarray(dt),
+                                             jnp.asarray(deltas), block=256)
+    n1, g1, tot1, idle1, cnt1 = fk.fold(jnp.asarray(dt[:cut]),
+                                        jnp.asarray(deltas[:cut]), block=256)
+    n2, g2, tot2, idle2, cnt2 = fk.fold(jnp.asarray(dt[cut:]),
+                                        jnp.asarray(deltas[cut:]),
+                                        (cnt1, tot1, idle1), block=256)
+    np.testing.assert_array_equal(
+        np.asarray(n_a), np.concatenate([np.asarray(n1), np.asarray(n2)]))
+    np.testing.assert_allclose(
+        np.asarray(g_a), np.concatenate([np.asarray(g1), np.asarray(g2)]),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(tot_a), float(tot2), rtol=1e-5)
+    np.testing.assert_allclose(float(idle_a), float(idle2), rtol=1e-5,
+                               atol=1e-7)
+    assert float(cnt_a) == float(cnt2)
+
+
+def test_carry_cumsum_kernel_matches_numpy():
+    rng = np.random.default_rng(3)
+    for e in (1, 100, 2048, 5000):
+        c = rng.random(e).astype(np.float32)
+        i = rng.random(e).astype(np.float32)
+        g, i_end = ops.fold_chunk_prefix(0.25, 0.5, c, i, block=256)
+        np.testing.assert_allclose(g, 0.25 + np.cumsum(c.astype(np.float64)),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(i_end, 0.5 + i.sum(dtype=np.float64),
+                                   rtol=1e-4)

@@ -267,7 +267,7 @@ def test_sanitize_matches_live_tracer_tolerance():
         res = compute_numpy(clean)
         np.testing.assert_allclose(res.per_worker, tr.per_worker_cm(),
                                    rtol=1e-9, err_msg=name)
-        assert tr.ring.head == len(clean), name
+        assert len(tr.freeze()) == len(clean), name
 
 
 def test_sanitize_vectorized_matches_tracer_on_random_dirty_logs():
@@ -287,11 +287,11 @@ def test_sanitize_vectorized_matches_tracer_on_random_dirty_logs():
             tr.register_worker("w")
         for ti, wi, di in zip(log.times, log.workers, log.deltas):
             tr.ingest(int(ti), int(wi), int(di))
-        n = tr.ring.head
-        assert n == len(clean)
-        np.testing.assert_array_equal(tr.ring.times[:n], clean.times)
-        np.testing.assert_array_equal(tr.ring.workers[:n], clean.workers)
-        np.testing.assert_array_equal(tr.ring.deltas[:n], clean.deltas)
+        frozen = tr.freeze()
+        assert len(frozen) == len(clean)
+        np.testing.assert_array_equal(frozen.times, clean.times)
+        np.testing.assert_array_equal(frozen.workers, clean.workers)
+        np.testing.assert_array_equal(frozen.deltas, clean.deltas)
         res = compute_numpy(clean)
         np.testing.assert_allclose(res.per_worker, tr.per_worker_cm(),
                                    rtol=1e-9)

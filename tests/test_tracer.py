@@ -107,12 +107,36 @@ def test_ingest_external_trace():
 
 
 def test_ring_overflow_counted():
-    tr = Tracer(capacity=8)
+    # autoflush=False: a full shard drops new events (counted, BPF ringbuf
+    # semantics) instead of draining itself through the fold
+    tr = Tracer(capacity=8, autoflush=False)
     w = tr.register_worker("w")
     for i in range(10):
         tr.begin(w, "x")
         tr.end(w)
     assert tr.ring.dropped == 12
+    assert tr.ring.dropped_per_shard() == [12]
+    # the surviving prefix still freezes to a valid log
+    log = tr.freeze()
+    assert len(log) == 8
+    log.validate()
+
+
+def test_autoflush_drains_instead_of_dropping():
+    clk = FakeClock()
+    tr = Tracer(n_min=0.0, capacity=8, clock=clk)
+    w = tr.register_worker("w")
+    for i in range(50):
+        tr.begin(w, "x")
+        clk.advance(1000)
+        tr.end(w)
+        clk.advance(100)
+    assert tr.ring.dropped == 0
+    log = tr.freeze()
+    assert len(log) == 100
+    log.validate()
+    res = compute_numpy(log)
+    np.testing.assert_array_equal(res.per_worker, tr.per_worker_cm())
 
 
 def test_gapp_facade_live(tmp_path):
