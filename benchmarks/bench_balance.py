@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Gapp, imbalance_stats
+from repro.core import ProfileSession, imbalance_stats
 
 
 def _simulate_pipeline(worker_split, stage_cost, n_items=64):
@@ -37,7 +37,7 @@ def _simulate_pipeline(worker_split, stage_cost, n_items=64):
 
 
 def _profile(trace):
-    g = Gapp(n_min=None)
+    g = ProfileSession(n_min=None)
     wids = {}
     events = []
     for name, t0, t1 in trace:

@@ -16,13 +16,14 @@ import time
 
 import numpy as np
 
-from repro.core import Gapp, SampleBuffer, SliceTable, StackRegistry, merge_table
+from repro.core import (ProfileSession, SampleBuffer, SliceTable,
+                        StackRegistry, merge_table)
 from repro.core import detector as detector_lib
 from repro.core.slices import CriticalSlice
 
 
 def _fleet_trial(rng, kind: str) -> bool:
-    g = Gapp(n_min=None, top_n=3)
+    g = ProfileSession(n_min=None, top_n=3)
     n_hosts = 16
     wids = [g.register_worker(f"host{i}", "host") for i in range(n_hosts)]
     target = int(rng.integers(0, n_hosts))
@@ -47,7 +48,7 @@ def _fleet_trial(rng, kind: str) -> bool:
         for h in np.argsort(durs):
             g.ingest(t + int(durs[h]), wids[int(h)], -1)
         t += int(durs.max()) + int(rng.integers(1e4, 1e5))
-    rep = g.report()
+    rep = g.snapshot()
     if not rep.paths:
         return False
     hit_worker = int(np.argmax(rep.per_worker)) == target

@@ -15,7 +15,7 @@ import numpy as np
 
 def run():
     from repro import configs
-    from repro.core.profiler import Gapp
+    from repro.core.session import ProfileSession
     from repro.data.pipeline import PrefetchLoader, SyntheticLM
     from repro.optim import adamw
     from repro.train.step import make_train_step
@@ -59,7 +59,7 @@ def run():
     offs, ons, gapps = [], [], []
     for _ in range(3):
         offs.append(loop(None))
-        g = Gapp(dt=0.002)
+        g = ProfileSession(dt=0.002)
         ons.append(loop(g))
         gapps.append(g)
     wall_off = statistics.median(offs)
@@ -67,7 +67,7 @@ def run():
     g = gapps[ons.index(wall_on)]
     overhead = (wall_on - wall_off) / wall_off * 100
     t0 = time.perf_counter()
-    rep = g.report()
+    rep = g.snapshot()
     ppt = time.perf_counter() - t0
     mem = g.tracer.memory_bytes() + g.probe.buffer.times.nbytes * 3
     events = g.tracer.ring.total_events()

@@ -1,0 +1,83 @@
+"""Streaming ProfileSession benchmark: drain+fold overlap and spill cost.
+
+Measures what the session API added over batch mode:
+
+* capture throughput with the background drain worker running (events/s
+  through live spans while the worker folds concurrently);
+* incremental ``snapshot()`` latency taken mid-capture;
+* the same capture with a disk-spill store — the resident-memory bound's
+  throughput price.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+from repro.core import ProfileSession
+
+
+def _hammer(session, wid, stop_evt, counter):
+    h = session.handle(wid)
+    n = 0
+    while not stop_evt.is_set():
+        h.begin("work")
+        h.end()
+        n += 1
+    counter.append(2 * n)
+
+
+def run_session(threads: int = 4, seconds: float = 1.0,
+                chunk_events: int = 1 << 14) -> dict:
+    out: dict = {"threads": threads, "seconds": seconds,
+                 "chunk_events": chunk_events}
+    for spill in (False, True):
+        path = tempfile.mktemp(suffix=".gappspill") if spill else None
+        s = ProfileSession(n_min=1.0, drain_interval=0.002,
+                           spill_path=path, chunk_events=chunk_events)
+        wids = [s.register_worker(f"t{i}") for i in range(threads)]
+        stop_evt = threading.Event()
+        counter: list[int] = []
+        workers = [threading.Thread(target=_hammer,
+                                    args=(s, w, stop_evt, counter))
+                   for w in wids]
+        s.start()
+        for t in workers:
+            t.start()
+        time.sleep(seconds / 2)
+        t0 = time.perf_counter()
+        snap = s.snapshot()
+        snap_s = time.perf_counter() - t0
+        time.sleep(seconds / 2)
+        stop_evt.set()
+        for t in workers:
+            t.join()
+        rep = s.result()
+        total = sum(counter)
+        key = "spill" if spill else "ram"
+        out[f"{key}_events"] = total
+        out[f"{key}_events_per_s"] = total / seconds
+        out[f"{key}_snapshot_ms"] = snap_s * 1e3
+        out[f"{key}_final_slices"] = rep.total_slices
+        if spill:
+            st = s.tracer.store
+            out["spill_max_resident_rows"] = st.max_resident_rows
+            out["spill_rows_on_disk"] = st.rows_on_disk
+            st.close()
+            os.unlink(path)
+        del snap
+    out["spill_slowdown"] = (out["ram_events_per_s"]
+                             / max(out["spill_events_per_s"], 1.0))
+    return out
+
+
+def main() -> None:
+    res = run_session()
+    print("name,value")
+    for k, v in res.items():
+        print(f"session_{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

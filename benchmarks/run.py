@@ -57,9 +57,26 @@ def smoke_probe(pairs: int, threads: int, out: str) -> dict:
     return res
 
 
+def smoke_session(threads: int, out: str) -> dict:
+    """Streaming-session smoke: live capture throughput with the background
+    drain+fold worker, mid-capture snapshot latency, and the disk-spill
+    store's cost (``python -m benchmarks.run --smoke session``)."""
+    from benchmarks import bench_session
+    res = bench_session.run_session(threads=threads)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# streaming session: {res['ram_events_per_s']:.0f} ev/s live "
+          f"(snapshot {res['ram_snapshot_ms']:.1f} ms mid-capture), "
+          f"{res['spill_events_per_s']:.0f} ev/s spilling "
+          f"(resident <= {res['spill_max_resident_rows']} rows, "
+          f"{res['spill_slowdown']:.2f}x slowdown) -> {out}")
+    return res
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", choices=["detect", "probe"],
+    ap.add_argument("--smoke", choices=["detect", "probe", "session"],
                     help="run one fast smoke benchmark and write a JSON "
                          "artifact instead of the full CSV harness")
     ap.add_argument("--n-slices", type=int, default=250_000,
@@ -78,6 +95,9 @@ def main() -> None:
         return
     if args.smoke == "probe":
         smoke_probe(args.pairs, args.threads, args.out or "BENCH_probe.json")
+        return
+    if args.smoke == "session":
+        smoke_session(args.threads, args.out or "BENCH_session.json")
         return
 
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,

@@ -1,0 +1,102 @@
+"""BENCH_*.json trend gate: diff fresh smoke results against a baseline.
+
+Every PR's CI run regenerates ``BENCH_detect.json`` / ``BENCH_probe.json``;
+the committed copies are the perf trajectory.  This tool compares a fresh
+artifact against the committed baseline metric-by-metric and fails (exit 1)
+when a lower-is-better metric regressed by more than ``--max-regression``
+(default 20%) — the ROADMAP's "wire BENCH_*.json trend reporting across PRs
+into CI" item.
+
+Usage (what ci.yml runs)::
+
+    cp BENCH_probe.json /tmp/probe_base.json        # committed baseline
+    python -m benchmarks.run --smoke probe          # fresh result
+    python -m benchmarks.trend --base /tmp/probe_base.json \
+        --new BENCH_probe.json \
+        --keys sharded_us_per_event_1t,sharded_us_per_event_mt
+
+``--warn-only`` reports the trend without failing (used for the detect
+smoke, whose absolute numbers swing more across runner generations).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Default metrics per artifact kind, keyed by a substring of the file name
+# (override with --keys).  A leading ``+`` marks a higher-is-better metric
+# (speedup ratios — machine-independent, so they trend cleanly across CI
+# runner generations); bare names are lower-is-better (absolute costs).
+_DEFAULT_KEYS = {
+    "probe": ("+speedup_1t", "+speedup_mt"),
+    "detect": ("+speedup",),
+}
+
+
+def _pick_default_keys(path: str) -> tuple[str, ...]:
+    for kind, keys in _DEFAULT_KEYS.items():
+        if kind in path:
+            return keys
+    return ()
+
+
+def compare(base: dict, new: dict, keys: tuple[str, ...],
+            max_regression: float) -> list[str]:
+    """Returns the list of regression messages (empty == pass)."""
+    failures = []
+    for spec in keys:
+        higher_better = spec.startswith("+")
+        k = spec.lstrip("+")
+        if k not in base or k not in new:
+            print(f"# trend: {k}: missing "
+                  f"({'base' if k not in base else 'new'}), skipped")
+            continue
+        b, n = float(base[k]), float(new[k])
+        if b <= 0:
+            continue
+        # regression = relative move in the bad direction
+        delta = (b - n) / b if higher_better else (n - b) / b
+        mark = "REGRESSED" if delta > max_regression else "ok"
+        print(f"# trend: {k}: base {b:.4g} -> new {n:.4g} "
+              f"({'-' if delta > 0 else '+'}{abs(delta) * 100:.1f}% "
+              f"{'worse' if delta > 0 else 'better/flat'}) [{mark}]")
+        if delta > max_regression:
+            failures.append(
+                f"{k} regressed {delta * 100:.1f}% "
+                f"(limit {max_regression * 100:.0f}%): {b:.4g} -> {n:.4g}")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--base", required=True, help="baseline JSON (committed)")
+    ap.add_argument("--new", required=True, help="fresh JSON (this run)")
+    ap.add_argument("--keys", default=None,
+                    help="comma-separated lower-is-better metrics "
+                         "(default: inferred from the file name)")
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="allowed relative increase before failing "
+                         "(0.2 == 20%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report the trend but always exit 0")
+    args = ap.parse_args(argv)
+    with open(args.base) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    keys = tuple(k for k in (args.keys or "").split(",") if k) \
+        or _pick_default_keys(args.new) or _pick_default_keys(args.base)
+    if not keys:
+        print("# trend: no metrics selected (use --keys)", file=sys.stderr)
+        return 2
+    failures = compare(base, new, keys, args.max_regression)
+    for msg in failures:
+        print(f"TREND FAILURE: {msg}", file=sys.stderr)
+    if failures and not args.warn_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import Gapp, imbalance_stats
+from repro.core import ProfileSession, imbalance_stats
 from repro.models import moe as moe_lib
 
 
@@ -36,7 +36,7 @@ def expert_loads(skew: float, seed: int = 0):
 
 def profile_loads(loads: np.ndarray, steps: int = 20,
                   ns_per_token: int = 2000):
-    g = Gapp(n_min=None)
+    g = ProfileSession(n_min=None)
     wids = [g.register_worker(f"expert{e}", "expert")
             for e in range(len(loads))]
     t = 0

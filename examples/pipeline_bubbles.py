@@ -11,12 +11,12 @@ Run:  PYTHONPATH=src python examples/pipeline_bubbles.py
 """
 import numpy as np
 
-from repro.core import Gapp, imbalance_stats
+from repro.core import ProfileSession, imbalance_stats
 from repro.pipeline.gpipe import schedule_intervals
 
 
 def profile_schedule(n_stages: int, n_micro: int):
-    g = Gapp(n_min=None)
+    g = ProfileSession(n_min=None)
     wids = [g.register_worker(f"stage{s}", "stage") for s in range(n_stages)]
     events = []
     for s, t0, t1 in schedule_intervals(n_stages, n_micro, t_stage=1e-3):

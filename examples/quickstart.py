@@ -3,43 +3,56 @@
 Four worker threads do parallel work, but every iteration one of them also
 holds a shared resource (a lock-protected section) three times longer than
 the parallel phase — a synthetic Bodytrack (paper §5.2).  GAPP needs no
-instrumentation of the lock itself: the span tracer + CMetric rank the
-serial section as the top bottleneck and the sampling probe attributes it.
+instrumentation of the lock itself: the streaming ``ProfileSession`` drains
+and folds events in the background *while the threads run*, pushes live
+top-1 updates through ``watch()``, and the final report ranks the serial
+section first with the sampling probe attributing it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import threading
 import time
 
-from repro.core import Gapp, render_text
+from repro.core import ProfileSession
 
 
 def main():
-    gapp = Gapp(n_min=None, dt=0.001)       # n_min defaults to workers/2
+    s = ProfileSession(n_min=None, dt=0.001)    # n_min defaults to workers/2
     lock = threading.Lock()
     n_threads = 4
-    wids = [gapp.register_worker(f"worker{i}") for i in range(n_threads)]
+    wids = [s.register_worker(f"worker{i}") for i in range(n_threads)]
+
+    # live push: the background drain worker delivers an incremental report
+    # every 50 ms without stopping the workload
+    updates = []
+    s.watch(lambda rep: updates.append(
+        rep.path_str(rep.paths[0]) if rep.paths else "<warming up>"),
+        every=0.05, top_n=1)
 
     def worker(i):
         for it in range(10):
-            with gapp.span(wids[i], "parallel_compute"):
+            with s.span(wids[i], "parallel_compute"):
                 time.sleep(0.004)
             # only worker 0 writes the shared output file (the bottleneck)
             if i == 0:
-                with gapp.span(wids[i], "write_output"):
+                with s.span(wids[i], "write_output"):
                     with lock:
                         time.sleep(0.012)
 
-    with gapp.running():
+    with s.running():
         threads = [threading.Thread(target=worker, args=(i,))
                    for i in range(n_threads)]
         for t in threads:
             t.start()
         for t in threads:
             t.join()
+        mid = s.snapshot()          # incremental report, capture still live
 
-    rep = gapp.report()
-    print(render_text(rep, max_paths=3))
+    rep = s.result()
+    print(s.export("text", max_paths=3))
+    print(f"live updates pushed while running: {len(updates)} "
+          f"(last: {updates[-1] if updates else '-'})")
+    print(f"mid-capture snapshot already saw {mid.total_slices} slices")
     top = rep.path_str(rep.paths[0])
     assert "write_output" in top, f"expected write_output, got {top}"
     print("\n=> GAPP pinpointed the serial section:", top)

@@ -13,7 +13,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core import Gapp, render_text
+from repro.core import ProfileSession
 from repro.models import init_lm
 from repro.serve.engine import Engine, Request
 
@@ -21,7 +21,7 @@ from repro.serve.engine import Engine, Request
 def main():
     cfg = configs.get_tiny("deepseek-7b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
-    gapp = Gapp(n_min=None, dt=0.002)
+    gapp = ProfileSession(n_min=None, dt=0.002)
     engine = Engine(cfg, params, batch_slots=8, cache_len=128, gapp=gapp)
 
     rng = np.random.default_rng(0)
@@ -40,8 +40,8 @@ def main():
         finished = engine.run(reqs)
     wall = time.perf_counter() - t0
 
-    rep = gapp.report()
-    print(render_text(rep, max_paths=4))
+    rep = gapp.result()
+    print(gapp.export("text", max_paths=4))
     toks = sum(len(r.out) for r in finished)
     print(f"served {len(finished)} requests, {toks} tokens in {wall:.2f}s "
           f"({toks / wall:.0f} tok/s)")

@@ -15,7 +15,7 @@ import time
 
 import jax
 
-from repro.core import Gapp, render_text
+from repro.core import ProfileSession, render_text
 from repro.models.common import ModelConfig
 from repro.optim import adamw
 from repro.train.step import make_train_step
@@ -45,7 +45,7 @@ def main():
 
     opt_cfg = adamw.AdamWConfig(lr=3e-4, warmup_steps=20,
                                 total_steps=args.steps)
-    gapp = Gapp(dt=0.002)
+    gapp = ProfileSession(dt=0.002)
     half = args.steps // 2
     tcfg = TrainerConfig(steps=half, batch_per_host=args.batch,
                          seq_len=args.seq, ckpt_every=max(half // 2, 1),
@@ -66,7 +66,7 @@ def main():
     delay = max(1.5 * step_s, 0.05)
     print(f"== phase 2: slow data loader injected ({delay * 1e3:.0f}ms/batch,"
           f" 1.5x the {step_s * 1e3:.0f}ms phase-1 step) ==")
-    gapp2 = Gapp(dt=0.002)
+    gapp2 = ProfileSession(dt=0.002)
     tcfg2 = TrainerConfig(steps=half, batch_per_host=args.batch,
                           seq_len=args.seq, ckpt_every=max(half // 2, 1),
                           ckpt_dir="/tmp/repro_example_ckpt2",

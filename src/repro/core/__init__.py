@@ -1,43 +1,42 @@
 """GAPP core: criticality-metric serialization-bottleneck profiler.
 
-Architecture — the offline dataflow is columnar end-to-end::
+Architecture — capture, analysis and output are one streaming pipeline
+around a :class:`~repro.core.session.ProfileSession`::
 
-    EventLog (struct-of-arrays event stream; ``events.py``)
-        │  sanitize()           drop spurious double-ACTIVATE / unmatched
-        │                       DEACTIVATE (the live tracer's §3.2 rules)
+    EventSource (``session.py``)
+      ├── TracerSource   live sharded lock-free capture (``tracer.py``)
+      ├── LogSource      offline EventLog replay in chunk_events batches
+      └── SpillSource    replay of a disk-spilled capture (``spill.py``)
+        │
+        ▼  background drain+fold worker (overlaps capture)
+    drain      k-way-merge the per-worker shards by timestamp
+    sanitize   §3.2 tolerance rules against the carried per-worker state
+    fold       carry-resumable ``fold_chunk``/``FoldCarry`` (``cmetric.py``)
+               — the paper's Table-1 eBPF-map state, advanced batch-wise;
+               backends registered in ``backends.py``
+               (numpy | stream | vector | pallas)
+    store      accumulated log: in-RAM ``EventStore`` or an append-only
+               disk ``SpillStore`` (resident memory O(chunk_events))
+        │
+        ▼  at any time, without stopping the workload
+    session.snapshot()  →  Detector (``detector.py``, fully vectorised
+                           over the columnar SliceTable of ``slices.py``):
+                           sample attachment, path merge, tag tables
+        │
         ▼
-    CMetric backend (``backends.py`` registry: numpy | stream | vector | pallas)
-        │  fold                 interval lengths → active counts → global_cm
-        │                       prefix (Pallas ``cmetric_fold`` on TPU)
-        │  pair + segment-sum   stable sort by worker pairs IN/OUT events;
-        │                       per-slice CMetric = gcm[out] - gcm[in]
-        ▼
-    CMetricResult — thin wrapper over a SliceTable (``slices.py``):
-        aligned columns (worker, start_ns, end_ns, cm, threads_av,
-        stack_id, n_at_exit), one row per completed timeslice
-        │  critical(n_min)      threads_av threshold → CriticalTable
-        ▼
-    Detector (``detector.py``, fully vectorised over the table):
-        sample attachment       one searchsorted per worker group
-        path merge              bincount/segment-sum keyed on stack id
-        tag frequency tables    flat (path, tag) histogram — Pallas
-                                ``tag_hist`` kernel on the fused backend
-        ▼
-    BottleneckReport → render_text / to_json (``report.py``)
+    BottleneckReport → exporter registry (``exporters.py``:
+        text | json | chrome | callback | watch) — ``session.export(fmt)``
+        or live push via ``session.watch(callback, every=...)``
 
-The live path (``tracer.py``) captures events into per-worker lock-free
-shards (``ShardedEventRing``) and maintains the same Table-1 state by
-draining the shards and replaying each batch through the carry-resumable
-vectorised fold (``fold_chunk`` + ``FoldCarry``) — the hot path is two
-deque appends, the map updates are batched array ops.  Critical slices
-land in a growable columnar ``CriticalBuffer`` whose ``.table()`` feeds
-the same detector; call paths are interned only for critical slices.
-``detect_offline(chunk_events=...)`` streams arbitrarily long logs
-through the same chunk fold in bounded memory.  Backends register
-themselves in ``backends.py`` via ``register_backend(name, fn,
-capabilities=..., fold_chunk=...)``; ``compute(log, backend=)``
-dispatches by name and new implementations can be plugged in without
-touching the pipeline.
+``session.result()`` quiesces and returns the final report — bit-equal on
+the ``numpy`` backend to ``detect_offline`` over the frozen log, for any
+drain/snapshot schedule.  ``Gapp``/``profile_log`` (``profiler.py``) are
+deprecated thin wrappers kept for old call sites.
+
+The offline dataflow (``detect_offline``) is the same pipeline driven
+synchronously: EventLog → sanitize → CMetric backend → SliceTable →
+detector → report; ``detect_offline(chunk_events=...)`` streams it through
+the identical chunk fold in bounded memory.
 """
 from repro.core.events import (ACTIVATE, DEACTIVATE, EventLog, EventRing,
                                EventStore, ShardedEventRing, sanitize_chunk,
@@ -53,9 +52,14 @@ from repro.core.cmetric import (CMetricResult, FoldCarry, compute,
 from repro.core.tracer import (LockedTracer, StackRegistry, TagRegistry,
                                Tracer, WorkerHandle)
 from repro.core.sampler import SampleBuffer, SamplingProbe, simulate_samples
-from repro.core.detector import (BottleneckReport, PathProfile, detect,
-                                 detect_offline, merge_table)
+from repro.core.detector import (BottleneckReport, PathProfile, build_report,
+                                 detect, detect_offline, merge_table)
 from repro.core.report import imbalance_stats, render_text, to_json
+from repro.core.spill import SpillStore
+from repro.core.exporters import (available_exporters, export, get_exporter,
+                                  register_exporter)
+from repro.core.session import (EventSource, LogSource, ProfileSession,
+                                SpillSource, TracerSource)
 from repro.core.profiler import Gapp, profile_log
 
 __all__ = [
@@ -68,9 +72,14 @@ __all__ = [
     "compute_streaming", "compute_vectorized", "fold_chunk",
     "StackRegistry", "TagRegistry", "Tracer", "LockedTracer", "WorkerHandle",
     "SampleBuffer", "SamplingProbe", "simulate_samples",
-    "BottleneckReport", "PathProfile", "detect", "detect_offline",
-    "merge_table", "imbalance_stats", "render_text", "to_json", "Gapp",
-    "profile_log",
+    "BottleneckReport", "PathProfile", "build_report", "detect",
+    "detect_offline", "merge_table", "imbalance_stats", "render_text",
+    "to_json",
+    "SpillStore", "available_exporters", "export", "get_exporter",
+    "register_exporter",
+    "ProfileSession", "EventSource", "TracerSource", "LogSource",
+    "SpillSource",
+    "Gapp", "profile_log",
 ]
 from repro.core.wakers import (classify_report, classify_tag,  # noqa: E402
                                critical_wakers, waker_edges)

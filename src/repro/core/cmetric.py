@@ -415,6 +415,27 @@ class FoldCarry:
     def per_worker(self) -> np.ndarray:
         return self.cm_hash
 
+    def per_worker_padded(self, num_workers: int) -> np.ndarray:
+        """A copy of ``cm_hash`` padded/truncated to ``num_workers`` — the
+        per-worker CMetric view consumers read while workers may still be
+        registering (the carry only grows at fold time)."""
+        out = np.zeros(num_workers)
+        n = min(num_workers, self.cm_hash.shape[0])
+        out[:n] = self.cm_hash[:n]
+        return out
+
+    def state(self) -> dict:
+        """Consistent copy of the aggregate state for incremental reports
+        (what :meth:`ProfileSession.snapshot` reads mid-stream; take it
+        under the fold lock so totals and per-worker rows agree)."""
+        return {
+            "per_worker": self.cm_hash.copy(),
+            "idle_time": self.idle,
+            "total_time": self.total_time,
+            "events": self.events,
+            "slices": self.slices,
+        }
+
 
 def _prefix_exact(carry: FoldCarry, contrib, idle_contrib):
     """Strictly sequential float64 prefix — bit-equal to the numpy oracle's

@@ -270,6 +270,45 @@ def _merge_python(
 _merge = _merge_python
 
 
+def build_report(
+    crit: SliceTable,
+    samples: SampleBuffer | None,
+    stacks: StackRegistry,
+    n_min: float,
+    *,
+    per_worker: np.ndarray,
+    worker_names: list[str],
+    tag_names: list[str],
+    tag_locations: list[str],
+    total_slices: int,
+    idle_time: float,
+    total_time: float,
+    top_n: int = 10,
+    use_pallas_hist: bool = False,
+) -> BottleneckReport:
+    """Merge + rank a critical-slice table into a :class:`BottleneckReport`.
+
+    The shared tail of every detection path — live :func:`detect`, offline
+    :func:`detect_offline`, and the incremental
+    :meth:`~repro.core.session.ProfileSession.snapshot`, which calls this
+    directly on the carried fold state mid-capture."""
+    paths_all, _ = merge_table(crit, samples, stacks, n_min,
+                               use_pallas_hist=use_pallas_hist)
+    paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
+    return BottleneckReport(
+        paths=paths,
+        per_worker=np.asarray(per_worker, np.float64),
+        worker_names=worker_names,
+        tag_names=tag_names,
+        tag_locations=tag_locations,
+        total_critical=len(crit),
+        total_slices=total_slices,
+        idle_time=idle_time,
+        total_time=total_time,
+        critical_table=crit,
+    )
+
+
 def detect(
     tracer: Tracer,
     samples: SampleBuffer | None = None,
@@ -281,19 +320,16 @@ def detect(
     n_min = tracer._resolved_n_min()
     snap = tracer.snapshot()
     crit = snap["critical"]
-    paths_all, _ = merge_table(crit, samples, tracer.stacks, n_min)
-    paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
-    return BottleneckReport(
-        paths=paths,
+    return build_report(
+        crit, samples, tracer.stacks, n_min,
         per_worker=snap["per_worker"],
         worker_names=tracer.worker_names(),
         tag_names=list(tracer.tags.names),
         tag_locations=list(tracer.tags.locations),
-        total_critical=len(crit),
         total_slices=snap["total_slices"],
         idle_time=snap["idle_time"],
         total_time=snap["total_time"],
-        critical_table=crit,
+        top_n=top_n,
     )
 
 
@@ -355,21 +391,17 @@ def detect_offline(
         per_worker, idle, total = res.per_worker, res.idle_time, res.total_time
         num_slices = res.num_slices
     caps = backends_lib.get_backend(backend).capabilities
-    paths_all, _ = merge_table(crit, samples, stacks, n_min,
-                               use_pallas_hist="fused" in caps
-                               and _pallas_hist_native())
-    paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
-    return BottleneckReport(
-        paths=paths,
+    return build_report(
+        crit, samples, stacks, n_min,
         per_worker=per_worker,
         worker_names=worker_names or [f"w{i}" for i in range(log.num_workers)],
         tag_names=list(tags.names),
         tag_locations=list(tags.locations),
-        total_critical=len(crit),
         total_slices=num_slices,
         idle_time=idle,
         total_time=total,
-        critical_table=crit,
+        top_n=top_n,
+        use_pallas_hist="fused" in caps and _pallas_hist_native(),
     )
 
 

@@ -422,6 +422,13 @@ class EventStore:
     chunks arrive time-sorted and boundary-clamped, so ``freeze()`` is a
     copy of the filled prefix with no re-sort.  Doubling numpy arrays, like
     :class:`~repro.core.slices.CriticalBuffer`.
+
+    This is the all-RAM store; the tracer accepts any object with this
+    interface via ``Tracer(store=...)`` — in particular
+    :class:`~repro.core.spill.SpillStore`, which pages full blocks to an
+    append-only file so ``resident_rows``/``resident_nbytes`` stay bounded
+    no matter how long the capture runs (for this in-RAM store they simply
+    equal the total).
     """
 
     _DTYPES = (np.int64, np.int32, np.int8, np.int32, np.int32)
@@ -437,6 +444,21 @@ class EventStore:
     @property
     def nbytes(self) -> int:
         return sum(c.nbytes for c in self._cols)
+
+    @property
+    def resident_rows(self) -> int:
+        """Rows held in RAM (== all rows: this store never spills)."""
+        return self._len
+
+    @property
+    def resident_nbytes(self) -> int:
+        return self.nbytes
+
+    def spill(self) -> None:
+        """No-op for the in-RAM store (interface parity with SpillStore)."""
+
+    def close(self) -> None:
+        """No-op for the in-RAM store (interface parity with SpillStore)."""
 
     def _reserve(self, extra: int) -> None:
         need = self._len + extra

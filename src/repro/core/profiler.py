@@ -1,111 +1,111 @@
-"""GAPP facade: tracer + sampling probe + detection, one object.
+"""Deprecated facades over :class:`~repro.core.session.ProfileSession`.
 
-Typical live use::
+``Gapp`` and ``profile_log`` were the original batch-shaped API (capture
+everything, ``freeze()``, detect once).  The profiler is now streaming-first:
+use :class:`ProfileSession` directly —
 
-    gapp = Gapp(n_min=None, dt=0.003)       # n_min=None => total_workers/2
-    w = gapp.register_worker("data_loader", kind="thread")
-    with gapp.running():
-        with gapp.span(w, "load_batch"):
-            ...
-    print(gapp.render())
+=====================================  =====================================
+old                                    new
+=====================================  =====================================
+``g = Gapp(...)``                      ``s = ProfileSession(...)``
+``with g.running(): ...``              ``with s.running(): ...`` (or ``with s:``)
+``g.report()``                         ``s.snapshot()`` (any time, live) /
+                                       ``s.result()`` (final, on close)
+``g.render()``                         ``s.export("text")``
+``g.freeze()``                         ``s.freeze()``
+``g.offline_report(backend=...)``      ``s.offline_report(backend=...)``
+``profile_log(log, ...)``              ``ProfileSession.offline(log, ...).result()``
+=====================================  =====================================
 
-Offline use (fleet traces / simulations)::
-
-    rep = profile_log(log, tags, stacks, n_min=32, sample_dt_ns=3_000_000)
+Both wrappers keep working (they delegate everything to a session and stay
+bit-compatible on the ``numpy`` fold backend) but new call sites should
+speak session: it adds the background drain+fold worker, ``watch()`` live
+updates, the exporter registry and disk spill (``spill_path=``).
 """
 from __future__ import annotations
 
-import contextlib
+import warnings
 
 from repro.core import detector as detector_lib
-from repro.core import report as report_lib
 from repro.core.events import EventLog
-from repro.core.sampler import SamplingProbe
-from repro.core.tracer import StackRegistry, TagRegistry, Tracer
+from repro.core.session import ProfileSession
+from repro.core.tracer import StackRegistry, TagRegistry
 
 
 class Gapp:
+    """Deprecated live facade (tracer + probe + detection) — now a thin
+    wrapper over one :class:`ProfileSession`; see the module docstring for
+    the migration table.  ``.session`` exposes the underlying session;
+    ``.tracer``/``.probe`` remain for existing call sites."""
+
     def __init__(self, n_min: float | None = None, dt: float = 0.003,
                  top_m: int = 8, top_n: int = 10, capacity: int = 1 << 16,
                  clock=None, fold_backend: str = "numpy",
-                 autoflush: bool = True):
-        # capacity is per worker shard (see Tracer)
-        kwargs = {} if clock is None else {"clock": clock}
-        self.tracer = Tracer(n_min=n_min, top_m=top_m, capacity=capacity,
-                             fold_backend=fold_backend, autoflush=autoflush,
-                             **kwargs)
-        self.probe = SamplingProbe(self.tracer, dt=dt, n_min=n_min)
+                 autoflush: bool = True, spill_path: str | None = None,
+                 chunk_events: int = 1 << 16):
+        warnings.warn("Gapp is deprecated; use repro.core.ProfileSession",
+                      DeprecationWarning, stacklevel=2)
+        self.session = ProfileSession(
+            n_min=n_min, dt=dt, top_m=top_m, top_n=top_n, capacity=capacity,
+            clock=clock, fold_backend=fold_backend, autoflush=autoflush,
+            spill_path=spill_path, chunk_events=chunk_events)
+        self.tracer = self.session.tracer
+        self.probe = self.session.probe
         self.top_n = top_n
 
     # --- worker / span API (delegates) ------------------------------------
     def register_worker(self, name: str, kind: str = "thread") -> int:
-        return self.tracer.register_worker(name, kind)
+        return self.session.register_worker(name, kind)
 
     def handle(self, wid: int):
         """The worker's lock-free probe endpoint (hot-path begin/end)."""
-        return self.tracer.handle(wid)
+        return self.session.handle(wid)
 
     def span(self, wid: int, tag: str):
-        return self.tracer.span(wid, tag)
+        return self.session.span(wid, tag)
 
     def frame(self, wid: int, tag: str):
-        return self.tracer.frame(wid, tag)
+        return self.session.frame(wid, tag)
 
-    def begin(self, wid: int, tag: str):
-        import sys
-        f = sys._getframe(1)
-        return self.tracer.begin(
-            wid, tag, f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}")
+    def begin(self, wid: int, tag: str, loc: str | None = None) -> int:
+        # Hot-path fix: the seed walked sys._getframe and built a location
+        # string on EVERY begin; the callsite is now resolved once per
+        # distinct tag inside the tracer (or passed explicitly via loc=).
+        return self.session.begin(wid, tag, loc)
 
-    def end(self, wid: int):
-        return self.tracer.end(wid)
+    def end(self, wid: int) -> None:
+        return self.session.end(wid)
 
     def ingest(self, *a, **k):
-        return self.tracer.ingest(*a, **k)
+        return self.session.ingest(*a, **k)
 
     # --- lifecycle ----------------------------------------------------------
     def start(self) -> None:
-        self.probe.start()
+        self.session.start()
 
     def stop(self) -> None:
-        self.probe.stop()
+        self.session.stop()
 
-    @contextlib.contextmanager
     def running(self):
-        self.start()
-        try:
-            yield self
-        finally:
-            self.stop()
+        return self.session.running()
 
     # --- results -------------------------------------------------------------
-    def report(self, top_n: int | None = None) -> detector_lib.BottleneckReport:
-        return detector_lib.detect(self.tracer, self.probe.buffer,
-                                   top_n=top_n or self.top_n)
+    def report(self, top_n: int | None = None):
+        return self.session.snapshot(top_n or self.top_n)
 
     def render(self, **kw) -> str:
-        return report_lib.render_text(self.report(), **kw)
+        return self.session.export("text", **kw)
 
     def freeze(self) -> EventLog:
-        return self.tracer.freeze()
+        return self.session.freeze()
 
     def offline_report(self, backend: str = "vector",
                        sample_dt_ns: int | None = None,
                        top_n: int | None = None,
-                       chunk_events: int | None = None
-                       ) -> detector_lib.BottleneckReport:
-        """Recompute the profile offline from the accumulated log with any
-        registered backend (cross-validates the online numbers; the vector/
-        pallas paths are the fleet-scale post-processing route).
-        ``chunk_events`` streams the fold in bounded memory via the
-        carry-resumable ``fold_chunk``."""
-        return detector_lib.detect_offline(
-            self.freeze(), self.tracer.tags, self.tracer.stacks,
-            self.tracer._resolved_n_min(), samples=self.probe.buffer
-            if len(self.probe.buffer) else None, sample_dt_ns=sample_dt_ns,
-            backend=backend, top_n=top_n or self.top_n,
-            worker_names=self.tracer.worker_names(),
-            chunk_events=chunk_events)
+                       chunk_events: int | None = None):
+        return self.session.offline_report(
+            backend=backend, sample_dt_ns=sample_dt_ns,
+            top_n=top_n or self.top_n, chunk_events=chunk_events)
 
 
 def profile_log(
@@ -117,8 +117,15 @@ def profile_log(
     backend: str = "numpy",
     top_n: int = 10,
     worker_names: list[str] | None = None,
-) -> detector_lib.BottleneckReport:
-    """One-call offline pipeline over a raw event log."""
-    return detector_lib.detect_offline(
-        log, tags, stacks, n_min, sample_dt_ns=sample_dt_ns, backend=backend,
-        top_n=top_n, worker_names=worker_names)
+    chunk_events: int | None = None,
+) -> "detector_lib.BottleneckReport":
+    """Deprecated one-call offline pipeline — now
+    ``ProfileSession.offline(...).result()``; ``chunk_events`` streams the
+    replay in bounded memory."""
+    warnings.warn("profile_log is deprecated; use "
+                  "repro.core.ProfileSession.offline(log, ...).result()",
+                  DeprecationWarning, stacklevel=2)
+    return ProfileSession.offline(
+        log, tags, stacks, n_min=n_min, backend=backend,
+        chunk_events=chunk_events, sample_dt_ns=sample_dt_ns, top_n=top_n,
+        worker_names=worker_names).result()

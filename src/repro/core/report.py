@@ -1,4 +1,10 @@
-"""Profile rendering — the Figure 7 / Table 2 / Figure 4-5 analogues."""
+"""Profile rendering — the Figure 7 / Table 2 / Figure 4-5 analogues.
+
+These functions are registered as the ``"text"`` and ``"json"`` exporters
+in :mod:`repro.core.exporters`; prefer ``session.export(fmt)`` /
+``export(report, fmt)`` so new formats stay pluggable.  The JSON schema is
+versioned via ``schema_version`` (bump on breaking layout changes).
+"""
 from __future__ import annotations
 
 import json
@@ -58,9 +64,15 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
     return "\n".join(lines)
 
 
+# Version of the to_json layout; parsers should check it before relying on
+# key positions.  2 == schema_version introduced (layout otherwise as v1).
+JSON_SCHEMA_VERSION = 2
+
+
 def to_json(rep: BottleneckReport) -> str:
     ct = rep.critical_table
     return json.dumps({
+        "schema_version": JSON_SCHEMA_VERSION,
         "total_time_s": rep.total_time,
         "idle_time_s": rep.idle_time,
         "total_slices": rep.total_slices,

@@ -4,7 +4,11 @@ A daemon thread fires every ``dt`` seconds; **iff** the instantaneous active
 worker count is below ``n_min`` it records, for every active worker, the
 current top-of-stack tag — the TPU-framework analogue of reading the
 instruction pointer.  Samples go to a struct-of-arrays buffer shared with the
-detector (the paper's single eBPF circular buffer).
+detector (the paper's single eBPF circular buffer).  A live
+:class:`~repro.core.session.ProfileSession` owns one probe and starts/stops
+it with the session; the incremental ``snapshot()`` reads the buffer
+concurrently with appends (prefix reads are safe — rows publish before the
+head moves).
 
 The conditional is what keeps overhead negligible: during healthy, fully
 parallel execution the probe wakes, reads one int, and goes back to sleep.
@@ -121,6 +125,15 @@ class SamplingProbe:
 
     def __exit__(self, *exc):
         self.stop()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None
+
+    def stats(self) -> dict:
+        """Probe counters for :meth:`ProfileSession.stats` / dashboards."""
+        return {"ticks": self.ticks, "hits": self.hits,
+                "stored": len(self.buffer), "dropped": self.buffer.dropped}
 
 
 def simulate_samples(log, dt_ns: int, n_min: float,

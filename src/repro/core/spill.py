@@ -1,0 +1,234 @@
+"""Disk-spill event store — bounded resident memory for unbounded captures.
+
+The live tracer accumulates every drained+folded chunk into its store so
+``freeze()`` can hand the whole run to the offline pipeline.  For long
+captures that store is the one unbounded allocation left in the profiler
+(ROADMAP: "spill the accumulated EventStore to disk so freeze() is also
+bounded").  :class:`SpillStore` is a drop-in replacement for
+:class:`~repro.core.events.EventStore` that pages full blocks of
+``chunk_events`` rows to an append-only file: the resident buffer never
+holds more than one block, so profiler-side event memory is O(chunk_events)
+no matter how many events stream through.
+
+File format (append-only, block-framed)::
+
+    [u64 nrows][times i64*n][workers i32*n][deltas i8*n][tags i32*n]
+    [stacks i32*n]  ...repeated per block...
+
+Blocks are written in drain order, which is time order (the tracer's flush
+clamps cross-chunk monotonicity), so reading the blocks back in sequence
+yields a time-sorted stream with no re-sort:
+
+* :meth:`iter_chunks` streams the file back one :class:`EventLog` block at
+  a time — what :class:`~repro.core.session.SpillSource` replays through a
+  new session in bounded memory;
+* :meth:`freeze` materialises the whole stream as one log (the legacy
+  whole-log path; unbounded by definition — prefer the streaming reader).
+
+Single-consumer like the stores it replaces: appends come from the
+tracer's flush (under its fold lock) or the offline session's fold loop.
+Readers never observe a torn block: blocks are append-only and flushed
+whole, and every read bounds itself to the flushed-byte watermark taken
+under the store lock.  A writer store *owns* its file for one capture
+(an existing file at the path is truncated at construction); use
+:meth:`SpillStore.open_readonly` to replay a finished capture.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.events import EventLog
+
+# Column order and dtypes of one spilled block (matches EventStore/EventLog).
+_COL_DTYPES = (np.int64, np.int32, np.int8, np.int32, np.int32)
+_HEADER = struct.Struct("<Q")
+_ROW_BYTES = sum(np.dtype(dt).itemsize for dt in _COL_DTYPES)
+
+
+class SpillStore:
+    """Append-only on-disk event store with an O(chunk_events) resident buffer.
+
+    Duck-compatible with :class:`~repro.core.events.EventStore`
+    (``append_columns`` / ``__len__`` / ``freeze`` / ``nbytes``), so it plugs
+    straight into ``Tracer(store=...)`` / ``ProfileSession(spill_path=...)``.
+    """
+
+    def __init__(self, path: str, chunk_events: int = 1 << 16, *,
+                 _readonly: bool = False):
+        self.path = str(path)
+        self.chunk_events = max(int(chunk_events), 1)
+        self._buf = [np.zeros(self.chunk_events, dt) for dt in _COL_DTYPES]
+        self._buf_len = 0
+        self._rows_on_disk = 0
+        self._blocks = 0
+        self._bytes_written = 0
+        self._file = None           # lazily opened write handle
+        self._closed = _readonly
+        self.max_resident_rows = 0  # high-water mark of the RAM buffer
+        self._lock = threading.Lock()
+        if _readonly:
+            self._scan_existing()
+        elif os.path.exists(self.path):
+            # a writer store owns its file for exactly one capture: a stale
+            # file from a previous run at the same path must not leak into
+            # this run's freeze()/iter_chunks()
+            os.remove(self.path)
+
+    @classmethod
+    def open_readonly(cls, path: str,
+                      chunk_events: int = 1 << 16) -> "SpillStore":
+        """Open an existing spill file for replay (appends disabled; the
+        file is NOT truncated — the writer-mode constructor is)."""
+        return cls(path, chunk_events, _readonly=True)
+
+    def _scan_existing(self) -> None:
+        """Index an existing file (read-only open): block/row counts come
+        from walking the headers, without reading column payloads."""
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, "rb") as f:
+            while True:
+                hdr = f.read(_HEADER.size)
+                if len(hdr) < _HEADER.size:
+                    break
+                (n,) = _HEADER.unpack(hdr)
+                f.seek(n * _ROW_BYTES, os.SEEK_CUR)
+                self._rows_on_disk += n
+                self._blocks += 1
+                self._bytes_written += _HEADER.size + n * _ROW_BYTES
+
+    # -- write side ----------------------------------------------------------
+    def _write_block(self, n: int) -> None:
+        """Flush the first ``n`` buffered rows as one framed block."""
+        if n == 0:
+            return
+        if self._file is None:
+            self._file = open(self.path, "ab")
+        self._file.write(_HEADER.pack(n))
+        for col in self._buf:
+            self._file.write(col[:n].tobytes())
+        self._file.flush()          # readers bound themselves to flushed bytes
+        self._rows_on_disk += n
+        self._blocks += 1
+        self._bytes_written += _HEADER.size + n * _ROW_BYTES
+        self._buf_len = 0
+
+    def append_columns(self, times, workers, deltas, tags, stacks) -> None:
+        e = len(times)
+        if e == 0:
+            return
+        if self._closed:
+            raise ValueError(f"SpillStore({self.path}) is closed")
+        cols = (times, workers, deltas, tags, stacks)
+        with self._lock:
+            lo = 0
+            while lo < e:
+                take = min(self.chunk_events - self._buf_len, e - lo)
+                for buf, arr in zip(self._buf, cols):
+                    buf[self._buf_len:self._buf_len + take] = arr[lo:lo + take]
+                self._buf_len += take
+                lo += take
+                self.max_resident_rows = max(self.max_resident_rows,
+                                             self._buf_len)
+                if self._buf_len == self.chunk_events:
+                    self._write_block(self._buf_len)
+
+    def spill(self) -> None:
+        """Force the resident buffer to disk (a partial block is fine)."""
+        with self._lock:
+            self._write_block(self._buf_len)
+            if self._file is not None:
+                self._file.flush()
+
+    def close(self) -> None:
+        """Flush and close the write handle; reads remain available."""
+        self.spill()
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+            self._closed = True
+
+    # -- stats ---------------------------------------------------------------
+    def __len__(self) -> int:
+        return self._rows_on_disk + self._buf_len
+
+    @property
+    def rows_on_disk(self) -> int:
+        return self._rows_on_disk
+
+    @property
+    def resident_rows(self) -> int:
+        return self._buf_len
+
+    @property
+    def resident_nbytes(self) -> int:
+        """RAM held by the store — the fixed one-block buffer."""
+        return sum(c.nbytes for c in self._buf)
+
+    # EventStore compat: ``nbytes`` feeds Tracer.memory_bytes, which reports
+    # *profiler-side* memory — for a spill store that is the resident buffer,
+    # not the file.
+    @property
+    def nbytes(self) -> int:
+        return self.resident_nbytes
+
+    @property
+    def spilled_nbytes(self) -> int:
+        return self._rows_on_disk * _ROW_BYTES + self._blocks * _HEADER.size
+
+    # -- read side -----------------------------------------------------------
+    def _read_limit(self) -> int:
+        """Flush the buffer and snapshot the complete-byte boundary: blocks
+        are append-only, so reading ``[0, limit)`` is safe against a
+        concurrent writer without holding the lock through the read."""
+        self.spill()
+        with self._lock:
+            return self._bytes_written
+
+    def _read_blocks(self, limit: int) -> Iterator[tuple[np.ndarray, ...]]:
+        if limit <= 0 or not os.path.exists(self.path):
+            return
+        with open(self.path, "rb") as f:
+            while f.tell() < limit:
+                hdr = f.read(_HEADER.size)
+                if len(hdr) < _HEADER.size:
+                    return
+                (n,) = _HEADER.unpack(hdr)
+                cols = []
+                for dt in _COL_DTYPES:
+                    raw = f.read(n * np.dtype(dt).itemsize)
+                    cols.append(np.frombuffer(raw, dt).copy())
+                yield tuple(cols)
+
+    def iter_chunks(self, num_workers: int) -> Iterator[EventLog]:
+        """Stream the store back as :class:`EventLog` blocks, oldest first.
+
+        Flushes the resident buffer first so the on-disk stream is complete;
+        memory per step is one block.  Safe against a concurrent writer:
+        only blocks fully written at call time are yielded.
+        """
+        for cols in self._read_blocks(self._read_limit()):
+            yield EventLog(*cols, num_workers=num_workers)
+
+    def freeze(self, num_workers: int) -> EventLog:
+        """Materialise the whole spilled stream as one log (legacy path;
+        resident memory is O(total events) here by definition)."""
+        parts = list(self._read_blocks(self._read_limit()))
+        if not parts:
+            return EventLog(*[np.zeros(0, dt) for dt in _COL_DTYPES],
+                            num_workers=num_workers)
+        return EventLog(*[np.concatenate(c) for c in zip(*parts)],
+                        num_workers=num_workers)
+
+    def __del__(self):  # pragma: no cover - interpreter-shutdown best effort
+        try:
+            if self._file is not None:
+                self._file.close()
+        except Exception:
+            pass

@@ -3,6 +3,11 @@
 Each worker becomes a track; spans become complete ('X') events; critical
 slices are emitted on a separate "critical" track with the CMetric attached
 as an argument, so the eye goes straight to what the ranking found.
+
+Registered as the ``"chrome"`` exporter in :mod:`repro.core.exporters` —
+``session.export("chrome", path=...)`` is the session-first spelling.  The
+trace is a pure function of the frozen log, so it is invariant to *when*
+the sharded tracer's drains ran during capture (covered by test).
 """
 from __future__ import annotations
 
@@ -59,6 +64,10 @@ def to_chrome_trace(log: EventLog, tag_names: list[str] | None = None,
 
 
 def dump_chrome_trace(tracer: Tracer, path: str) -> None:
+    """Write a tracer's (or ProfileSession's) full trace to ``path``."""
+    if hasattr(tracer, "export"):                 # ProfileSession (any source)
+        tracer.export("chrome", path=path)
+        return
     log = tracer.freeze()
     data = to_chrome_trace(log, tag_names=list(tracer.tags.names),
                            worker_names=tracer.worker_names(),

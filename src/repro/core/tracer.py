@@ -169,11 +169,20 @@ class Tracer:
     the bit-exact float64 default); ``autoflush=False`` disables the
     opportunistic flush when a shard fills, so a full shard drops new
     events (counted) like a BPF ring buffer.
+
+    ``store`` is where drained+folded chunks accumulate — anything with the
+    :class:`~repro.core.events.EventStore` interface; pass a
+    :class:`~repro.core.spill.SpillStore` to page the stream to disk and
+    bound resident memory.  ``on_drain`` hooks (``fn(folded_events)``,
+    called under the fold lock after each non-empty flush) let a
+    :class:`~repro.core.session.ProfileSession`'s background worker track
+    drain progress without polling the store.
     """
 
     def __init__(self, n_min: float | None = None, top_m: int = 8,
                  capacity: int = 1 << 16, clock=time.perf_counter_ns,
-                 fold_backend: str = "numpy", autoflush: bool = True):
+                 fold_backend: str = "numpy", autoflush: bool = True,
+                 store=None):
         self.n_min = n_min              # None => total_count/2, resolved lazily
         self.clock = clock
         self.fold_backend = fold_backend
@@ -187,9 +196,10 @@ class Tracer:
         # at flush time, by replaying drained batches through fold_chunk.
         from repro.core.cmetric import FoldCarry  # deferred: import cycle
         self._carry = FoldCarry.init(0)
-        self._store = EventStore()
+        self._store = store if store is not None else EventStore()
         self._critical = CriticalBuffer()
         self._total_slices = 0
+        self.on_drain: list = []    # fn(folded_events), under the fold lock
         # events removed by the §3.2 tolerance filter at flush time (e.g.
         # the orphaned end of a span whose begin was ring-dropped): the full
         # accounting is appended == len(freeze()) + ring.dropped + this
@@ -255,10 +265,12 @@ class Tracer:
         afford the frame walk the seed paid on every single begin()."""
         if location is None:
             f = sys._getframe(2)
-            # walk out of the tracer and contextlib frames (span() enters
-            # through the @contextmanager machinery) to the user call site
-            while f is not None and f.f_globals.get("__name__") in (
-                    __name__, "contextlib"):
+            # walk out of profiler-internal frames (tracer, session/Gapp
+            # facades, contextlib's @contextmanager machinery) to the user
+            # call site
+            while f is not None and (
+                    (f.f_globals.get("__name__") or "").startswith("repro.core")
+                    or f.f_globals.get("__name__") == "contextlib"):
                 f = f.f_back
             if f is not None:
                 location = f"{f.f_globals.get('__name__', '?')}:{f.f_lineno}"
@@ -340,6 +352,8 @@ class Tracer:
             self._critical.extend_table(table, crit_mask)
         self._store.append_columns(times, workers, deltas, tags, stacks_col)
         self._total_slices += len(table)
+        for hook in self.on_drain:
+            hook(times.shape[0])
 
     # -- public span API (compat wrappers over the handle hot path) ----------
     def begin(self, wid: int, tag: str, location: str | None = None) -> int:
@@ -437,12 +451,9 @@ class Tracer:
         with self._fold_lock:
             self._flush_locked()
             carry = self._carry
-            per_worker = np.zeros(self.total_count)
-            per_worker[:carry.cm_hash.shape[0]] = \
-                carry.cm_hash[:per_worker.shape[0]]
             return {
                 "critical": self._critical.table(),
-                "per_worker": per_worker,
+                "per_worker": carry.per_worker_padded(self.total_count),
                 "total_slices": self._total_slices,
                 "idle_time": carry.idle,
                 "total_time": carry.total_time,
@@ -483,21 +494,26 @@ class Tracer:
         self.sync()
         return self._store.freeze(self.total_count)
 
+    @property
+    def store(self):
+        """The accumulating event store (EventStore or SpillStore)."""
+        return self._store
+
     def per_worker_cm(self) -> np.ndarray:
         self.sync()
-        out = np.zeros(self.total_count)
-        cm = self._carry.cm_hash
-        out[:cm.shape[0]] = cm[:out.shape[0]]
-        return out
+        return self._carry.per_worker_padded(self.total_count)
 
     def worker_names(self) -> list[str]:
         return [w.name for w in self.workers]
 
     def memory_bytes(self) -> int:
-        """Profiler-side memory: accumulated log + pending shards + critical
-        buffer (the paper's Table-2 'M' column analogue)."""
-        return (self._store.nbytes + self.ring.approx_nbytes()
-                + self._critical.nbytes)
+        """Profiler-side *resident* memory: accumulated log (its RAM share
+        only, for a spill store) + pending shards + critical buffer (the
+        paper's Table-2 'M' column analogue)."""
+        store_b = getattr(self._store, "resident_nbytes", None)
+        if store_b is None:
+            store_b = self._store.nbytes
+        return store_b + self.ring.approx_nbytes() + self._critical.nbytes
 
 
 class LockedTracer:

@@ -14,7 +14,7 @@ import threading
 
 import numpy as np
 
-from repro.core.profiler import Gapp
+from repro.core.session import ProfileSession
 
 
 class SyntheticLM:
@@ -49,8 +49,8 @@ class SyntheticLM:
 class PrefetchLoader:
     """Bounded-queue background prefetch around any ``next_batch`` source."""
 
-    def __init__(self, source, depth: int = 2, gapp: Gapp | None = None,
-                 delay_s: float = 0.0):
+    def __init__(self, source, depth: int = 2,
+                 gapp: ProfileSession | None = None, delay_s: float = 0.0):
         self.source = source
         self.queue: queue.Queue = queue.Queue(maxsize=depth)
         self.gapp = gapp

@@ -17,8 +17,8 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.profiler import Gapp
 from repro.core.report import imbalance_stats
+from repro.core.session import ProfileSession
 
 
 @dataclasses.dataclass
@@ -36,17 +36,20 @@ class StragglerMonitor:
                  n_min: float | None = None):
         self.num_hosts = num_hosts
         self.zmax = zmax
-        self.gapp = Gapp(n_min=n_min if n_min is not None else num_hosts / 2)
-        self.wids = [self.gapp.register_worker(f"host{i}", "host")
+        self.session = ProfileSession(
+            n_min=n_min if n_min is not None else num_hosts / 2)
+        # Back-compat alias: pre-session call sites read ``monitor.gapp``.
+        self.gapp = self.session
+        self.wids = [self.session.register_worker(f"host{i}", "host")
                      for i in range(num_hosts)]
 
     def record_step(self, host: int, t_start_ns: int, t_end_ns: int,
                     tag: str = "train_step") -> None:
-        self.gapp.ingest(t_start_ns, self.wids[host], +1, tag)
-        self.gapp.ingest(t_end_ns, self.wids[host], -1, tag)
+        self.session.ingest(t_start_ns, self.wids[host], +1, tag)
+        self.session.ingest(t_end_ns, self.wids[host], -1, tag)
 
     def verdict(self) -> StragglerVerdict:
-        pw = self.gapp.tracer.per_worker_cm()
+        pw = self.session.tracer.per_worker_cm()
         stats = imbalance_stats(pw)
         mean, std = stats["mean"], stats["std"]
         worst = int(np.argmax(pw))

@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.ckpt import checkpoint
-from repro.core.profiler import Gapp
+from repro.core.session import ProfileSession
 from repro.data.pipeline import PrefetchLoader, SyntheticLM
 from repro.models import init_lm
 from repro.models.common import ModelConfig
@@ -40,13 +40,15 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
-                 tcfg: TrainerConfig, gapp: Gapp | None = None,
+                 tcfg: TrainerConfig, gapp: ProfileSession | None = None,
                  step_fn: Callable | None = None):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
+        # ``gapp`` accepts a ProfileSession or the deprecated Gapp facade
+        # (both expose the same span/lifecycle surface).
         self.gapp = gapp if gapp is not None else (
-            Gapp(dt=0.002) if tcfg.profile else None)
+            ProfileSession(dt=0.002) if tcfg.profile else None)
         self.step_fn = step_fn or jax.jit(
             make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
         front = None
@@ -136,4 +138,6 @@ class Trainer:
 
     def profile_report(self, top_n: int = 10):
         assert self.gapp is not None
-        return self.gapp.report(top_n=top_n)
+        if hasattr(self.gapp, "snapshot"):          # ProfileSession
+            return self.gapp.snapshot(top_n)
+        return self.gapp.report(top_n=top_n)        # deprecated Gapp

@@ -19,6 +19,27 @@ def test_render_and_json_roundtrip():
     assert abs(d["paths"][0]["cmetric_s"] - 0.04) < 1e-9
 
 
+def test_json_schema_version_and_roundtrip():
+    """to_json -> parse -> the ranked paths and CMetrics survive exactly."""
+    tr, clk, w = _bottleneck_trace()
+    rep = detect(tr, None)
+    d = json.loads(to_json(rep))
+    assert d["schema_version"] == 2
+    # ranked paths round-trip in order, with bit-identical CMetrics (json
+    # floats are repr'd losslessly) and slice counts
+    assert [p["path"] for p in d["paths"]] == \
+        [rep.path_str(p) for p in rep.paths]
+    assert [p["cmetric_s"] for p in d["paths"]] == \
+        [p.cmetric for p in rep.paths]
+    assert [p["slices"] for p in d["paths"]] == [p.slices for p in rep.paths]
+    assert [p["rank"] for p in d["paths"]] == \
+        list(range(1, len(rep.paths) + 1))
+    assert d["per_worker_cmetric_s"] == rep.per_worker.tolist()
+    assert d["worker_names"] == rep.worker_names
+    assert d["total_critical"] == rep.total_critical
+    assert d["total_slices"] == rep.total_slices
+
+
 def test_imbalance_stats():
     s = imbalance_stats(np.array([1.0, 1.0, 1.0, 5.0]))
     assert s["argmax"] == 3
