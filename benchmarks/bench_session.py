@@ -6,7 +6,13 @@ Measures what the session API added over batch mode:
   through live spans while the worker folds concurrently);
 * incremental ``snapshot()`` latency taken mid-capture;
 * the same capture with a disk-spill store — the resident-memory bound's
-  throughput price.
+  throughput price;
+* the same capture with a per-shard decode budget (``max_rows_per_sync``)
+  — the capped mid-capture snapshot latency.  Note: under full-rate
+  producers on an oversubscribed box the contended per-row decode cost is
+  dominated by GIL convoying, so the capped latency ≈ budget × contended
+  row cost, well above the uncontended budget decode (the ROADMAP's
+  "batched C decode" item is the next lever).
 """
 from __future__ import annotations
 
@@ -29,13 +35,22 @@ def _hammer(session, wid, stop_evt, counter):
 
 
 def run_session(threads: int = 4, seconds: float = 1.0,
-                chunk_events: int = 1 << 14) -> dict:
+                chunk_events: int = 1 << 14,
+                max_rows_per_sync: int = 1024) -> dict:
     out: dict = {"threads": threads, "seconds": seconds,
-                 "chunk_events": chunk_events}
-    for spill in (False, True):
+                 "chunk_events": chunk_events,
+                 "max_rows_per_sync": max_rows_per_sync}
+    # three configs: all-RAM store, disk spill, and the per-shard decode
+    # budget (the capped mid-capture snapshot latency is the ROADMAP item:
+    # a multi-MHz producer must not starve snapshot())
+    for mode in ("ram", "spill", "capped"):
+        spill = mode == "spill"
         path = tempfile.mktemp(suffix=".gappspill") if spill else None
-        s = ProfileSession(n_min=1.0, drain_interval=0.002,
-                           spill_path=path, chunk_events=chunk_events)
+        s = ProfileSession(
+            n_min=1.0, drain_interval=0.002, spill_path=path,
+            chunk_events=chunk_events,
+            max_rows_per_sync=max_rows_per_sync if mode == "capped"
+            else None)
         wids = [s.register_worker(f"t{i}") for i in range(threads)]
         stop_evt = threading.Event()
         counter: list[int] = []
@@ -55,11 +70,10 @@ def run_session(threads: int = 4, seconds: float = 1.0,
             t.join()
         rep = s.result()
         total = sum(counter)
-        key = "spill" if spill else "ram"
-        out[f"{key}_events"] = total
-        out[f"{key}_events_per_s"] = total / seconds
-        out[f"{key}_snapshot_ms"] = snap_s * 1e3
-        out[f"{key}_final_slices"] = rep.total_slices
+        out[f"{mode}_events"] = total
+        out[f"{mode}_events_per_s"] = total / seconds
+        out[f"{mode}_snapshot_ms"] = snap_s * 1e3
+        out[f"{mode}_final_slices"] = rep.total_slices
         if spill:
             st = s.tracer.store
             out["spill_max_resident_rows"] = st.max_resident_rows

@@ -70,15 +70,37 @@ def smoke_session(threads: int, out: str) -> dict:
           f"(snapshot {res['ram_snapshot_ms']:.1f} ms mid-capture), "
           f"{res['spill_events_per_s']:.0f} ev/s spilling "
           f"(resident <= {res['spill_max_resident_rows']} rows, "
-          f"{res['spill_slowdown']:.2f}x slowdown) -> {out}")
+          f"{res['spill_slowdown']:.2f}x slowdown), capped snapshot "
+          f"{res['capped_snapshot_ms']:.1f} ms @ budget "
+          f"{res['max_rows_per_sync']} -> {out}")
+    return res
+
+
+def smoke_fleet(producers: int, out: str) -> dict:
+    """Fleet-ingest smoke: localhost loopback, N producer sessions
+    streaming over real sockets into one IngestServer+FleetSource session
+    (``python -m benchmarks.run --smoke fleet`` -> BENCH_fleet.json).
+    Report-only in CI: throughput, final-report latency, losslessness."""
+    from benchmarks import bench_fleet
+    res = bench_fleet.run_fleet(producers=producers)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# fleet ingest: {res['producers']} producers, "
+          f"{res['ingest_events_per_s']:.0f} ev/s over loopback, "
+          f"final report {res['final_report_ms']:.1f} ms, "
+          f"lossless={res['lossless']} -> {out}")
     return res
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", choices=["detect", "probe", "session"],
+    ap.add_argument("--smoke", choices=["detect", "probe", "session",
+                                        "fleet"],
                     help="run one fast smoke benchmark and write a JSON "
                          "artifact instead of the full CSV harness")
+    ap.add_argument("--producers", type=int, default=2,
+                    help="producer sessions for --smoke fleet")
     ap.add_argument("--n-slices", type=int, default=250_000,
                     help="table size for --smoke detect (~43%% of rows land "
                          "under n_min, so the default yields >=1e5 critical "
@@ -98,6 +120,9 @@ def main() -> None:
         return
     if args.smoke == "session":
         smoke_session(args.threads, args.out or "BENCH_session.json")
+        return
+    if args.smoke == "fleet":
+        smoke_fleet(args.producers, args.out or "BENCH_fleet.json")
         return
 
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,

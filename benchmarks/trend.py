@@ -1,4 +1,4 @@
-"""BENCH_*.json trend gate: diff fresh smoke results against a baseline.
+"""BENCH_*.json trend gate + series: diff against a baseline, keep history.
 
 Every PR's CI run regenerates ``BENCH_detect.json`` / ``BENCH_probe.json``;
 the committed copies are the perf trajectory.  This tool compares a fresh
@@ -17,12 +17,23 @@ Usage (what ci.yml runs)::
 
 ``--warn-only`` reports the trend without failing (used for the detect
 smoke, whose absolute numbers swing more across runner generations).
+
+**Series mode** (``--append-series DIR``) persists a trend *series*
+instead of only the pairwise diff: every run appends one timestamped JSON
+(``<kind>-<timestamp>[-<sha>].json`` with the tracked metrics + commit
+metadata) into ``DIR``, and the recent trajectory is printed.  CI restores
+``DIR`` from the previous run's cache and uploads it as an artifact, so
+the chain of per-PR points survives across runs — each artifact carries
+the whole history, not just one pairwise delta.  Pure addition: series
+mode never fails the run.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import time
 
 # Default metrics per artifact kind, keyed by a substring of the file name
 # (override with --keys).  A leading ``+`` marks a higher-is-better metric
@@ -31,6 +42,8 @@ import sys
 _DEFAULT_KEYS = {
     "probe": ("+speedup_1t", "+speedup_mt"),
     "detect": ("+speedup",),
+    "session": ("+ram_events_per_s", "capped_snapshot_ms"),
+    "fleet": ("+ingest_events_per_s", "final_report_ms"),
 }
 
 
@@ -68,9 +81,60 @@ def compare(base: dict, new: dict, keys: tuple[str, ...],
     return failures
 
 
+def _series_kind(path: str) -> str:
+    base = os.path.basename(path)
+    for kind in ("probe", "detect", "session", "fleet"):
+        if kind in base:
+            return kind
+    return os.path.splitext(base)[0] or "bench"
+
+
+def append_series(series_dir: str, new_path: str, new: dict,
+                  keys: tuple[str, ...], window: int = 12) -> str:
+    """Append one timestamped point for ``new`` into ``series_dir`` and
+    print the recent trajectory of the tracked metrics."""
+    os.makedirs(series_dir, exist_ok=True)
+    kind = _series_kind(new_path)
+    stamp = time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
+    # disambiguate same-second appends without a commit id
+    sha = (os.environ.get("GITHUB_SHA") or "")[:9] or f"p{os.getpid()}"
+    name = f"{kind}-{stamp}-{sha}.json"
+    bare = {k.lstrip("+"): new[k.lstrip("+")] for k in keys
+            if k.lstrip("+") in new}
+    point = {
+        "kind": kind,
+        "timestamp": new.get("timestamp") or stamp,
+        "recorded_at": stamp,
+        "sha": os.environ.get("GITHUB_SHA"),
+        "run_id": os.environ.get("GITHUB_RUN_ID"),
+        "metrics": bare or {k: v for k, v in new.items()
+                            if isinstance(v, (int, float))},
+    }
+    out = os.path.join(series_dir, name)
+    with open(out, "w") as f:
+        json.dump(point, f, indent=2)
+    # print the tail of the chain (lexicographic == chronological)
+    entries = sorted(e for e in os.listdir(series_dir)
+                     if e.startswith(f"{kind}-") and e.endswith(".json"))
+    print(f"# series: {kind}: {len(entries)} point(s) in {series_dir} "
+          f"(+ {name})")
+    for e in entries[-window:]:
+        try:
+            with open(os.path.join(series_dir, e)) as f:
+                p = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        vals = ", ".join(f"{k}={v:.4g}" for k, v in
+                         sorted(p.get("metrics", {}).items()))
+        print(f"#   {e[len(kind) + 1:-5]}: {vals}")
+    return out
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--base", required=True, help="baseline JSON (committed)")
+    ap.add_argument("--base", default=None,
+                    help="baseline JSON (committed); omit to skip the "
+                         "pairwise diff (series-only mode)")
     ap.add_argument("--new", required=True, help="fresh JSON (this run)")
     ap.add_argument("--keys", default=None,
                     help="comma-separated lower-is-better metrics "
@@ -80,19 +144,31 @@ def main(argv: list[str] | None = None) -> int:
                          "(0.2 == 20%%)")
     ap.add_argument("--warn-only", action="store_true",
                     help="report the trend but always exit 0")
+    ap.add_argument("--append-series", metavar="DIR", default=None,
+                    help="append a timestamped point for --new into DIR "
+                         "and print the recent trajectory (never fails)")
+    ap.add_argument("--series-window", type=int, default=12,
+                    help="how many trailing series points to print")
     args = ap.parse_args(argv)
-    with open(args.base) as f:
-        base = json.load(f)
     with open(args.new) as f:
         new = json.load(f)
     keys = tuple(k for k in (args.keys or "").split(",") if k) \
-        or _pick_default_keys(args.new) or _pick_default_keys(args.base)
-    if not keys:
-        print("# trend: no metrics selected (use --keys)", file=sys.stderr)
-        return 2
-    failures = compare(base, new, keys, args.max_regression)
-    for msg in failures:
-        print(f"TREND FAILURE: {msg}", file=sys.stderr)
+        or _pick_default_keys(args.new) \
+        or (_pick_default_keys(args.base) if args.base else ())
+    failures: list[str] = []
+    if args.base:
+        if not keys:
+            print("# trend: no metrics selected (use --keys)",
+                  file=sys.stderr)
+            return 2
+        with open(args.base) as f:
+            base = json.load(f)
+        failures = compare(base, new, keys, args.max_regression)
+        for msg in failures:
+            print(f"TREND FAILURE: {msg}", file=sys.stderr)
+    if args.append_series:
+        append_series(args.append_series, args.new, new, keys,
+                      args.series_window)
     if failures and not args.warn_only:
         return 1
     return 0

@@ -33,6 +33,12 @@ the ``numpy`` backend to ``detect_offline`` over the frozen log, for any
 drain/snapshot schedule.  ``Gapp``/``profile_log`` (``profiler.py``) are
 deprecated thin wrappers kept for old call sites.
 
+Multi-host: the :mod:`repro.fleet` package streams drained chunks over a
+socket (``RemoteSink`` → ``IngestServer``, attached via
+``session.export("remote", addr=...)``) and merges N host streams into
+one session through ``FleetSource`` — same pipeline, reports carry host
+provenance (``report.worker_hosts`` / per-host exporter lanes).
+
 The offline dataflow (``detect_offline``) is the same pipeline driven
 synchronously: EventLog → sanitize → CMetric backend → SliceTable →
 detector → report; ``detect_offline(chunk_events=...)`` streams it through

@@ -66,6 +66,9 @@ class BottleneckReport:
     idle_time: float
     total_time: float
     critical_table: SliceTable | None = None   # the merged slices, columnar
+    # host provenance (fleet ingest): worker_hosts[wid] names the host that
+    # produced worker ``wid``; None for single-host sessions
+    worker_hosts: list[str] | None = None
 
     @property
     def critical_ratio(self) -> float:     # paper Table 2 "CR" column
@@ -78,6 +81,53 @@ class BottleneckReport:
 
     def path_str(self, p: PathProfile) -> str:
         return " > ".join(self.tag_name(t) for t in p.stack) or "<no-path>"
+
+    # -- host-provenance views (fleet reports) -------------------------------
+    @property
+    def hosts(self) -> list[str]:
+        """Distinct host names in worker order ([] for single-host)."""
+        if not self.worker_hosts:
+            return []
+        return list(dict.fromkeys(self.worker_hosts))
+
+    def host_of_worker(self, wid: int) -> str | None:
+        if self.worker_hosts and 0 <= wid < len(self.worker_hosts):
+            return self.worker_hosts[wid]
+        return None
+
+    def per_host(self) -> dict[str, dict]:
+        """Group the fleet-wide numbers per host: cumulative CMetric,
+        worker count, and the critical-slice share (count / summed CMetric
+        / mean ``threads_av``) of each host's workers.  Empty for
+        single-host reports — everything is already 'this host'."""
+        if not self.worker_hosts:
+            return {}
+        hosts = self.hosts
+        idx = {h: i for i, h in enumerate(hosts)}
+        wh = np.asarray([idx[h] for h in self.worker_hosts], np.int64)
+        out = {}
+        pw = self.per_worker
+        ct = self.critical_table
+        for h in hosts:
+            mask = wh == idx[h]
+            wids = np.flatnonzero(mask)
+            row = {
+                "workers": int(mask.sum()),
+                "cmetric_s": float(pw[wids[wids < pw.shape[0]]].sum())
+                if pw.size else 0.0,
+                "critical": 0,
+                "critical_cm_s": 0.0,
+                "threads_av_mean": None,
+            }
+            if ct is not None and len(ct):
+                cmask = np.isin(ct.worker, wids)
+                row["critical"] = int(cmask.sum())
+                if cmask.any():
+                    row["critical_cm_s"] = float(ct.cm[cmask].sum())
+                    row["threads_av_mean"] = float(
+                        np.mean(ct.threads_av[cmask]))
+            out[h] = row
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -285,13 +335,15 @@ def build_report(
     total_time: float,
     top_n: int = 10,
     use_pallas_hist: bool = False,
+    worker_hosts: list[str] | None = None,
 ) -> BottleneckReport:
     """Merge + rank a critical-slice table into a :class:`BottleneckReport`.
 
     The shared tail of every detection path — live :func:`detect`, offline
     :func:`detect_offline`, and the incremental
     :meth:`~repro.core.session.ProfileSession.snapshot`, which calls this
-    directly on the carried fold state mid-capture."""
+    directly on the carried fold state mid-capture.  ``worker_hosts`` tags
+    each worker with its origin host (fleet ingest)."""
     paths_all, _ = merge_table(crit, samples, stacks, n_min,
                                use_pallas_hist=use_pallas_hist)
     paths = sorted(paths_all, key=lambda p: -p.cmetric)[:top_n]
@@ -306,6 +358,7 @@ def build_report(
         idle_time=idle_time,
         total_time=total_time,
         critical_table=crit,
+        worker_hosts=worker_hosts,
     )
 
 
@@ -313,12 +366,16 @@ def detect(
     tracer: Tracer,
     samples: SampleBuffer | None = None,
     top_n: int = 10,
+    budgeted: bool = False,
 ) -> BottleneckReport:
     """Live-mode detection from the tracer's batched online state (one
     ``snapshot()``: pending shard events are drained and folded once, and
-    every reported number comes from the same sync point)."""
+    every reported number comes from the same sync point).  ``budgeted``
+    caps that flush at the tracer's ``max_rows_per_sync`` decode budget —
+    bounded latency, possibly lagging the capture by the backlog."""
     n_min = tracer._resolved_n_min()
-    snap = tracer.snapshot()
+    # keyword only when asked: LockedTracer's snapshot has no budget
+    snap = tracer.snapshot(budgeted=True) if budgeted else tracer.snapshot()
     crit = snap["critical"]
     return build_report(
         crit, samples, tracer.stacks, n_min,

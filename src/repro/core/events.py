@@ -36,6 +36,7 @@ with results identical to whole-log :meth:`EventLog.sanitize`.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
 from collections import deque
@@ -357,16 +358,30 @@ class ShardedEventRing:
         return sum(64 * len(sh) + 64 * sh.capacity // 8 for sh in self.shards)
 
     # -- consumer side -------------------------------------------------------
-    def drain(self) -> DrainedChunk | None:
-        """Pop every published event from every shard and merge by time.
+    def drain(self, limit_per_shard: int | None = None) -> DrainedChunk | None:
+        """Pop published events from every shard and merge by time.
 
         Single-consumer; safe against concurrent appends (producers only
         touch the right end of their own deques, we only pop the left of a
         snapshotted prefix).  Returns ``None`` when nothing is pending.
+
+        ``limit_per_shard`` caps the decode work of one drain (the
+        per-shard decode budget): at most that many rows are popped per
+        shard, oldest first, leaving the rest pending for the next drain.
+        When the cap truncates a shard, every shard's take is additionally
+        trimmed to the *time frontier* — the earliest last-popped timestamp
+        among truncated shards — and rows beyond it are pushed back, so a
+        capped drain never interleaves one shard's future with another's
+        past (skewed shard rates would otherwise hit the cross-flush
+        monotonic clamp and distort durations).
         """
-        parts_t, parts_w, parts_d, parts_g, parts_a = [], [], [], [], []
+        popped: list[tuple[EventShard, list, list]] = []
+        frontier: int | None = None
         for sh in self.shards:
             m = len(sh.metas)           # publication snapshot
+            truncated = limit_per_shard is not None and m > limit_per_shard
+            if truncated:
+                m = limit_per_shard
             if m == 0:
                 continue
             # popleft() is atomic per call and touches the opposite end from
@@ -377,6 +392,24 @@ class ShardedEventRing:
             mpop = sh.metas.popleft
             ts = [tpop() for _ in range(m)]
             ms = [mpop() for _ in range(m)]
+            popped.append((sh, ts, ms))
+            if truncated and (frontier is None or ts[-1] < frontier):
+                frontier = ts[-1]
+        parts_t, parts_w, parts_d, parts_g, parts_a = [], [], [], [], []
+        for sh, ts, ms in popped:
+            if frontier is not None and ts[-1] > frontier:
+                # keep the <= frontier prefix, push the tail back unpopped
+                # (appendleft touches the consumer's end only — producers
+                # append on the right)
+                cut = bisect.bisect_right(ts, frontier)
+                for t, mv in zip(reversed(ts[cut:]), reversed(ms[cut:])):
+                    sh.metas.appendleft(mv)
+                    sh.times.appendleft(t)
+                ts = ts[:cut]
+                ms = ms[:cut]
+            m = len(ts)
+            if m == 0:
+                continue
             sh.drained += m
             deltas = np.empty(m, np.int8)
             tags = np.empty(m, np.int32)

@@ -46,6 +46,11 @@ class Exporter:
 
 _REGISTRY: dict[str, Exporter] = {}
 
+# Exporters that live in optional packages: resolved on first use so the
+# core never imports them eagerly (``session.export("remote", addr=...)``
+# just works without an explicit ``import repro.fleet``).
+_LAZY_EXPORTERS = {"remote": "repro.fleet.transport"}
+
 
 def register_exporter(name: str, fn: ExporterFn | None = None, *,
                       capabilities: Iterable[str] = ()) -> ExporterFn:
@@ -66,9 +71,17 @@ def get_exporter(name: str) -> Exporter:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(
-            f"unknown exporter {name!r}; available: "
-            f"{', '.join(available_exporters())}") from None
+        pass
+    mod = _LAZY_EXPORTERS.get(name)
+    if mod is not None:
+        import importlib
+        importlib.import_module(mod)    # registers on import
+        if name in _REGISTRY:
+            return _REGISTRY[name]
+    known = ", ".join(sorted(set(available_exporters())
+                             | set(_LAZY_EXPORTERS)))
+    raise KeyError(
+        f"unknown exporter {name!r}; available: {known}") from None
 
 
 def available_exporters() -> list[str]:
@@ -101,10 +114,11 @@ def _export_json(rep, *, session=None, **kw) -> str:
 
 @register_exporter("chrome", capabilities={"trace"})
 def _export_chrome(rep, *, session=None, log=None, path=None,
-                   tag_names=None, worker_names=None, critical=None) -> str:
+                   tag_names=None, worker_names=None, critical=None,
+                   worker_hosts=None) -> str:
     """Chrome-trace JSON.  The report alone does not carry the event stream,
-    so the log comes from ``log=`` or ``session.freeze()``; names and the
-    critical overlay default to the report's."""
+    so the log comes from ``log=`` or ``session.freeze()``; names, host
+    lanes and the critical overlay default to the report's."""
     if log is None:
         if session is None:
             raise ValueError("chrome exporter needs log= or session=")
@@ -114,7 +128,9 @@ def _export_chrome(rep, *, session=None, log=None, path=None,
         tag_names=tag_names if tag_names is not None else rep.tag_names,
         worker_names=(worker_names if worker_names is not None
                       else rep.worker_names),
-        critical=critical if critical is not None else rep.critical_table)
+        critical=critical if critical is not None else rep.critical_table,
+        worker_hosts=(worker_hosts if worker_hosts is not None
+                      else rep.worker_hosts))
     if path is not None:
         with open(path, "w") as f:
             f.write(data)

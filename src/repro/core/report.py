@@ -54,6 +54,23 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
                           sorted(classes.items(), key=lambda kv: -kv[1]))
         lines.append(f"critical CMetric by class: {parts}")
         lines.append("")
+    # host lanes (fleet reports): fleet-wide roll-up, then one worker lane
+    # block per host; single-host reports keep the flat chart
+    if rep.worker_hosts:
+        lines.append("per-host CMetric")
+        per_host = rep.per_host()
+        top_h = max((h["cmetric_s"] for h in per_host.values()), default=0.0)
+        for host, row in sorted(per_host.items(),
+                                key=lambda kv: -kv[1]["cmetric_s"]):
+            n = int(bar_width * row["cmetric_s"] / top_h) if top_h > 0 else 0
+            av = (f"  av par {row['threads_av_mean']:.2f}"
+                  if row["threads_av_mean"] is not None else "")
+            lines.append(f"  {host:>24s} {row['cmetric_s'] * 1e3:12.3f} ms "
+                         f"|{'#' * n}")
+            lines.append(f"  {'':>24s} {row['workers']} worker(s), "
+                         f"{row['critical']} critical "
+                         f"({row['critical_cm_s'] * 1e3:.3f} ms){av}")
+        lines.append("")
     lines.append("per-worker CMetric")
     top = float(np.max(rep.per_worker)) if rep.per_worker.size else 0.0
     for wid in np.argsort(-rep.per_worker):
@@ -65,14 +82,21 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
 
 
 # Version of the to_json layout; parsers should check it before relying on
-# key positions.  2 == schema_version introduced (layout otherwise as v1).
-JSON_SCHEMA_VERSION = 2
+# key positions.  2 == schema_version introduced (layout otherwise as v1);
+# 3 == additive host-provenance keys (worker_hosts / per_host, present only
+# for fleet reports — v2 parsers keep working).
+JSON_SCHEMA_VERSION = 3
 
 
 def to_json(rep: BottleneckReport) -> str:
     ct = rep.critical_table
+    host_fields = {}
+    if rep.worker_hosts:
+        host_fields = {"worker_hosts": list(rep.worker_hosts),
+                       "per_host": rep.per_host()}
     return json.dumps({
         "schema_version": JSON_SCHEMA_VERSION,
+        **host_fields,
         "total_time_s": rep.total_time,
         "idle_time_s": rep.idle_time,
         "total_slices": rep.total_slices,

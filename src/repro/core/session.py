@@ -90,8 +90,17 @@ class EventSource:
     def worker_names(self) -> list[str]:
         return [f"w{i}" for i in range(self.num_workers)]
 
+    def worker_hosts(self) -> list[str] | None:
+        """Host provenance per worker (fleet sources); None == single-host."""
+        return None
+
     def chunks(self) -> Iterator[EventLog]:
         raise NotImplementedError
+
+    def request_stop(self) -> None:
+        """Ask an open-ended source (e.g. a fleet ingest stream) to flush
+        and end its chunk iterator; finite replays ignore it.  Called by
+        :meth:`ProfileSession.stop` before joining the worker."""
 
 
 class TracerSource(EventSource):
@@ -204,7 +213,8 @@ class ProfileSession:
                  autoflush: bool = True, drain_interval: float = 0.002,
                  spill_path: str | None = None, chunk_events: int = 1 << 16,
                  sample_dt_ns: int | None = None,
-                 samples: SampleBuffer | None = None, store=None):
+                 samples: SampleBuffer | None = None, store=None,
+                 max_rows_per_sync: int | None = None):
         if source is None:
             if store is None and spill_path is not None:
                 store = SpillStore(spill_path, chunk_events=chunk_events)
@@ -212,7 +222,7 @@ class ProfileSession:
             source = TracerSource(Tracer(
                 n_min=n_min, top_m=top_m, capacity=capacity,
                 fold_backend=fold_backend, autoflush=autoflush, store=store,
-                **kwargs))
+                max_rows_per_sync=max_rows_per_sync, **kwargs))
         self.source = source
         self.top_n = top_n
         self.fold_backend = fold_backend
@@ -314,8 +324,11 @@ class ProfileSession:
 
     def stop(self) -> None:
         """Quiesce the background machinery (keeps the session open: spans
-        can still be recorded and snapshots taken; ``close()`` finalizes)."""
+        can still be recorded and snapshots taken; ``close()`` finalizes).
+        Open-ended sources (fleet ingest) are asked to flush and end their
+        stream first, so the worker can't be stuck waiting for data."""
         self._stop_evt.set()
+        self.source.request_stop()
         if self._worker is not None:
             self._worker.join(timeout=5.0)
             self._worker = None
@@ -344,12 +357,19 @@ class ProfileSession:
         self.stop()
         if not self.source.live:
             self._offline_drain_inline()
-        self._final = self.snapshot()
+        elif self.tracer.max_rows_per_sync is not None:
+            self.tracer.sync()      # final reports are complete: consume
+            #                         the backlog budget-wise before sealing
+        # seal BEFORE the final snapshot so it takes the unbudgeted path —
+        # stragglers appended since the sync above must all be folded
         self._closed = True
+        self._final = self.snapshot()
         self._fire_watchers(force=True)
         store = getattr(self.tracer, "store", None) if self.tracer else None
         if store is not None:
             store.spill()
+        for sink in getattr(self.tracer, "sinks", None) or []:
+            sink.spill()            # flush-barrier attached RemoteSinks
 
     # -- background workers --------------------------------------------------
     def _note_drain(self, n_events: int) -> None:
@@ -358,8 +378,21 @@ class ProfileSession:
 
     def _drain_loop(self) -> None:
         tracer = self.tracer
-        while not self._stop_evt.wait(self.drain_interval):
-            tracer.sync()
+        budgeted = tracer.max_rows_per_sync is not None
+        backlog = 0
+        # with a decode budget the loop bites off max_rows_per_sync rows per
+        # shard per step and immediately re-runs while a backlog remains —
+        # each step releases the fold lock, and a waiting snapshot()
+        # (tracer._reader_waiting) makes the loop pause so the reader is
+        # next in line: snapshot latency is one budget's decode, not the
+        # whole backlog
+        while not self._stop_evt.wait(
+                0.0 if backlog and not tracer._reader_waiting
+                else self.drain_interval):
+            if budgeted:
+                backlog = tracer.sync_budgeted()
+            else:
+                tracer.sync()
             self._fire_watchers()
 
     def _chunks(self) -> Iterator[EventLog]:
@@ -369,6 +402,10 @@ class ProfileSession:
 
     def _fold_one(self, part: EventLog) -> None:
         with self._fold_lock:
+            # fleet sources grow their worker space as hosts join the
+            # merge; the carry must cover every id before sanitize indexes
+            # its open mask
+            self._carry.ensure_workers(part.num_workers)
             part, _, keep = sanitize_chunk(part, self._carry.open)
             self._sanitize_dropped += int(keep.size - keep.sum())
             self._carry, tbl = backends_lib.fold_chunk(
@@ -460,8 +497,13 @@ class ProfileSession:
             return self._final
         top_n = top_n or self.top_n
         if self.source.live:
+            # under a decode budget a mid-capture snapshot flushes at most
+            # one budget (bounded latency); the final close() consumes the
+            # whole backlog first, so sealed reports are complete
+            budgeted = (not self._closed
+                        and self.tracer.max_rows_per_sync is not None)
             return detector_lib.detect(self.tracer, self.probe.buffer,
-                                       top_n=top_n)
+                                       top_n=top_n, budgeted=budgeted)
         with self._fold_lock:
             crit = self._crit.table()
             st = self._carry.state()
@@ -476,6 +518,7 @@ class ProfileSession:
             total_time=st["total_time"],
             top_n=top_n,
             use_pallas_hist=self._use_pallas_hist(),
+            worker_hosts=self.source.worker_hosts(),
         )
 
     def result(self, top_n: int | None = None):

@@ -88,16 +88,25 @@ class SpillStore:
 
     def _scan_existing(self) -> None:
         """Index an existing file (read-only open): block/row counts come
-        from walking the headers, without reading column payloads."""
+        from walking the headers, without reading column payloads.
+
+        A truncated tail — a capture cut mid-write (partial header or a
+        header whose payload runs past EOF) — is ignored: the watermark
+        stops at the last *complete* block, so readers never decode a torn
+        payload."""
         if not os.path.exists(self.path):
             return
+        size = os.path.getsize(self.path)
         with open(self.path, "rb") as f:
             while True:
                 hdr = f.read(_HEADER.size)
                 if len(hdr) < _HEADER.size:
                     break
                 (n,) = _HEADER.unpack(hdr)
-                f.seek(n * _ROW_BYTES, os.SEEK_CUR)
+                end = f.tell() + n * _ROW_BYTES
+                if end > size:
+                    break           # torn tail block: exclude from watermark
+                f.seek(end)
                 self._rows_on_disk += n
                 self._blocks += 1
                 self._bytes_written += _HEADER.size + n * _ROW_BYTES
@@ -203,6 +212,8 @@ class SpillStore:
                 cols = []
                 for dt in _COL_DTYPES:
                     raw = f.read(n * np.dtype(dt).itemsize)
+                    if len(raw) < n * np.dtype(dt).itemsize:
+                        return      # torn tail beyond the watermark: stop
                     cols.append(np.frombuffer(raw, dt).copy())
                 yield tuple(cols)
 

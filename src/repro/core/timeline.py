@@ -21,13 +21,30 @@ from repro.core.tracer import Tracer
 
 def to_chrome_trace(log: EventLog, tag_names: list[str] | None = None,
                     worker_names: list[str] | None = None,
-                    critical=None) -> str:
+                    critical=None,
+                    worker_hosts: list[str] | None = None) -> str:
     """Serialize an EventLog as a Chrome trace JSON string.
 
     ``critical``: optional critical slices to overlay — any iterable of
     CriticalSlice rows (a list, a live ``CriticalBuffer`` or a columnar
     ``SliceTable`` / ``CriticalTable``).
+
+    ``worker_hosts`` (fleet reports) renders *host lanes*: each host
+    becomes its own process (pid) named after it, with that host's worker
+    tracks inside; the critical overlay moves to the lane after the hosts.
+    Without it the layout is the single-host one (everything in pid 0).
     """
+    hosts: list[str] = []
+    pid_of_worker: dict[int, int] = {}
+    if worker_hosts:
+        hosts = list(dict.fromkeys(worker_hosts))
+        pid_of_worker = {w: hosts.index(h)
+                         for w, h in enumerate(worker_hosts)}
+    crit_pid = len(hosts) if hosts else 1
+
+    def _pid(w: int) -> int:
+        return pid_of_worker.get(int(w), 0)
+
     events = []
     open_spans: dict[int, tuple[int, int]] = {}
     for t, w, d, tag in zip(log.times, log.workers, log.deltas, log.tags):
@@ -41,23 +58,26 @@ def to_chrome_trace(log: EventLog, tag_names: list[str] | None = None,
             name = tag_names[tag0] if tag_names and 0 <= tag0 < len(tag_names) \
                 else f"tag{tag0}"
             events.append({
-                "name": name, "ph": "X", "pid": 0, "tid": int(w),
+                "name": name, "ph": "X", "pid": _pid(w), "tid": int(w),
                 "ts": t0 / 1e3, "dur": (int(t) - t0) / 1e3,
             })
     meta = []
+    for pid, host in enumerate(hosts):
+        meta.append({"name": "process_name", "ph": "M", "pid": pid,
+                     "args": {"name": host}})
     if worker_names:
         for wid, name in enumerate(worker_names):
-            meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+            meta.append({"name": "thread_name", "ph": "M", "pid": _pid(wid),
                          "tid": wid, "args": {"name": name}})
     for cs in critical or []:
         events.append({
-            "name": "CRITICAL", "ph": "X", "pid": 1, "tid": cs.worker,
+            "name": "CRITICAL", "ph": "X", "pid": crit_pid, "tid": cs.worker,
             "ts": cs.start_ns / 1e3, "dur": (cs.end_ns - cs.start_ns) / 1e3,
             "args": {"cmetric_ms": cs.cm * 1e3,
                      "threads_av": cs.threads_av},
         })
     if critical:
-        meta.append({"name": "process_name", "ph": "M", "pid": 1,
+        meta.append({"name": "process_name", "ph": "M", "pid": crit_pid,
                      "args": {"name": "critical slices"}})
     return json.dumps({"traceEvents": meta + events,
                        "displayTimeUnit": "ms"})

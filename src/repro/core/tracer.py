@@ -182,11 +182,15 @@ class Tracer:
     def __init__(self, n_min: float | None = None, top_m: int = 8,
                  capacity: int = 1 << 16, clock=time.perf_counter_ns,
                  fold_backend: str = "numpy", autoflush: bool = True,
-                 store=None):
+                 store=None, max_rows_per_sync: int | None = None):
         self.n_min = n_min              # None => total_count/2, resolved lazily
         self.clock = clock
         self.fold_backend = fold_backend
         self.autoflush = autoflush
+        # per-shard decode budget of one flush: caps the Python decode loop
+        # a single sync (and therefore a mid-capture snapshot) can run, so a
+        # multi-MHz producer can't starve readers.  None == drain fully.
+        self.max_rows_per_sync = max_rows_per_sync
         self.tags = TagRegistry()
         self.stacks = StackRegistry(top_m)
         self.ring = ShardedEventRing(capacity)
@@ -197,6 +201,10 @@ class Tracer:
         from repro.core.cmetric import FoldCarry  # deferred: import cycle
         self._carry = FoldCarry.init(0)
         self._store = store if store is not None else EventStore()
+        # extra chunk consumers (e.g. repro.fleet's RemoteSink): every
+        # drained+folded chunk is forwarded right after it lands in the
+        # store, same columns, same order
+        self.sinks: list = []
         self._critical = CriticalBuffer()
         self._total_slices = 0
         self.on_drain: list = []    # fn(folded_events), under the fold lock
@@ -205,6 +213,11 @@ class Tracer:
         # accounting is appended == len(freeze()) + ring.dropped + this
         self.tolerance_dropped = 0
         self._fold_lock = threading.Lock()     # flush/drain consumer lock
+        # reader-priority hint: while a snapshot() waits on the fold lock,
+        # the drain loop and the producers' opportunistic autoflushes back
+        # off so the reader is next in line (a plain bool — races only
+        # delay the hint by one flush)
+        self._reader_waiting = False
         self._reg_lock = threading.Lock()
         self.enabled = True
 
@@ -279,9 +292,12 @@ class Tracer:
     def _append_slow(self, shard) -> bool:
         """A shard hit capacity: try a non-blocking flush, then either admit
         the event or drop it (counted, BPF ringbuf semantics)."""
-        if self.autoflush and self._fold_lock.acquire(False):
+        if (self.autoflush and not self._reader_waiting
+                and self._fold_lock.acquire(False)):
             try:
-                self._flush_locked()
+                # respect the decode budget: freeing one budget's worth of
+                # rows is enough to admit the event without a long stall
+                self._flush_locked(self.max_rows_per_sync)
             finally:
                 self._fold_lock.release()
         if len(shard.metas) >= shard.capacity:
@@ -299,12 +315,34 @@ class Tracer:
     # -- batched probe analysis (the deferred Table-1 state machine) ---------
     def sync(self) -> None:
         """Drain all shards and replay the batch through the vectorised
-        chunk fold, advancing the online CMetric/critical-slice state."""
-        with self._fold_lock:
-            self._flush_locked()
+        chunk fold, advancing the online CMetric/critical-slice state.
 
-    def _flush_locked(self) -> None:
-        chunk = self.ring.drain()
+        Always complete: with a ``max_rows_per_sync`` budget the backlog
+        present at entry is consumed in budget-sized flushes (bounded even
+        under a live producer — rows appended *during* the sync stay
+        pending, exactly like the unbudgeted single-pass drain)."""
+        with self._fold_lock:
+            if self.max_rows_per_sync is None:
+                self._flush_locked()
+                return
+            remaining = self.ring.pending()
+            while remaining > 0:
+                done = self._flush_locked(self.max_rows_per_sync)
+                if done == 0:
+                    break
+                remaining -= done
+
+    def sync_budgeted(self) -> int:
+        """One budget-capped flush (the session drain loop's step): decodes
+        at most ``max_rows_per_sync`` rows per shard, so a mid-capture
+        ``snapshot()`` waiting on the fold lock is never stuck behind an
+        unbounded decode.  Returns the rows still pending after it."""
+        with self._fold_lock:
+            self._flush_locked(self.max_rows_per_sync)
+        return self.ring.pending()
+
+    def _flush_locked(self, limit: int | None = None) -> int:
+        chunk = self.ring.drain(limit)
         # total_count *after* the drain: a worker that registered while we
         # drained may already have events in the chunk, and every map below
         # must cover its id
@@ -312,7 +350,8 @@ class Tracer:
         carry = self._carry
         carry.ensure_workers(w_count)
         if chunk is None:
-            return
+            return 0
+        drained = len(chunk)
         times = chunk.times
         workers = chunk.workers
         deltas = chunk.deltas
@@ -334,7 +373,7 @@ class Tracer:
                 times[keep], workers[keep], deltas[keep], tags[keep],
                 aux[keep])
         if times.shape[0] == 0:
-            return
+            return drained
         stacks_col = np.full(times.shape[0], NO_STACK, np.int32)
         clog = EventLog(times, workers, deltas, tags, stacks_col, w_count)
         self._carry, table = backends_lib.fold_chunk(
@@ -351,9 +390,12 @@ class Tracer:
                 stacks_col[deact_pos[r]] = sid
             self._critical.extend_table(table, crit_mask)
         self._store.append_columns(times, workers, deltas, tags, stacks_col)
+        for sink in self.sinks:
+            sink.append_columns(times, workers, deltas, tags, stacks_col)
         self._total_slices += len(table)
         for hook in self.on_drain:
             hook(times.shape[0])
+        return drained
 
     # -- public span API (compat wrappers over the handle hot path) ----------
     def begin(self, wid: int, tag: str, location: str | None = None) -> int:
@@ -444,20 +486,33 @@ class Tracer:
                 h.stack = s[1]
 
     # -- results --------------------------------------------------------------
-    def snapshot(self) -> dict:
+    def snapshot(self, budgeted: bool = False) -> dict:
         """One consistent view of the online state under a single sync —
         what the detector consumes (per-property access would re-sync and
-        could interleave fresh mini-batches between reads)."""
-        with self._fold_lock:
-            self._flush_locked()
-            carry = self._carry
-            return {
-                "critical": self._critical.table(),
-                "per_worker": carry.per_worker_padded(self.total_count),
-                "total_slices": self._total_slices,
-                "idle_time": carry.idle,
-                "total_time": carry.total_time,
-            }
+        could interleave fresh mini-batches between reads).
+
+        ``budgeted=True`` caps the flush at ``max_rows_per_sync`` rows per
+        shard: the snapshot may then lag the capture by the undecoded
+        backlog (incremental semantics), but its latency is bounded no
+        matter how fast producers append."""
+        self._reader_waiting = True
+        try:
+            with self._fold_lock:
+                self._reader_waiting = False
+                return self._snapshot_locked(budgeted)
+        finally:
+            self._reader_waiting = False
+
+    def _snapshot_locked(self, budgeted: bool) -> dict:
+        self._flush_locked(self.max_rows_per_sync if budgeted else None)
+        carry = self._carry
+        return {
+            "critical": self._critical.table(),
+            "per_worker": carry.per_worker_padded(self.total_count),
+            "total_slices": self._total_slices,
+            "idle_time": carry.idle,
+            "total_time": carry.total_time,
+        }
 
     @property
     def critical(self) -> CriticalBuffer:

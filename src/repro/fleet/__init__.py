@@ -1,0 +1,36 @@
+"""Fleet ingest subsystem — multi-host GAPP profiling.
+
+Turns the single-host streaming profiler into a fleet profiler:
+
+* :mod:`repro.fleet.wire` — versioned length-prefixed binary frame format
+  for event chunks (see its docstring for the wire spec table);
+* :mod:`repro.fleet.transport` — :class:`RemoteSink` (producer: stream a
+  session's drained chunks over a socket, with backpressure + reconnect)
+  and :class:`IngestServer` (consumer: N producers → one fleet hub);
+* :mod:`repro.fleet.aggregate` — :class:`FleetSource`, an
+  :class:`~repro.core.session.EventSource` that k-way-merges per-host
+  streams (shard tie-break semantics, clock-offset normalization) so one
+  :class:`~repro.core.session.ProfileSession` folds the whole fleet and
+  reports bottlenecks with host provenance.
+
+Offline, the same merge ingests spill files copied off the hosts::
+
+    from repro.fleet import FleetSource
+    rep = ProfileSession(FleetSource.from_files(paths), n_min=2.0).result()
+
+Importing this package also registers the ``"remote"`` exporter
+(``session.export("remote", addr=(host, port))``); :mod:`repro.core`
+loads it lazily on first use.
+"""
+from repro.fleet.aggregate import FleetSource, HostStream
+from repro.fleet.transport import IngestServer, RemoteSink, attach_remote
+from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD,
+                              WIRE_VERSION, WireError, decode_chunk,
+                              encode_chunk, pack_frame, read_frame)
+
+__all__ = [
+    "FleetSource", "HostStream", "IngestServer", "RemoteSink",
+    "attach_remote", "WIRE_VERSION", "WireError", "ChunkFrame",
+    "encode_chunk", "decode_chunk", "pack_frame", "read_frame",
+    "CHUNK", "HELLO", "MERGED_SHARD",
+]

@@ -1,0 +1,673 @@
+"""Socket transport: stream drained chunks off-host, ingest N producers.
+
+Producer side — :class:`RemoteSink` attaches to a live
+:class:`~repro.core.session.ProfileSession` (``attach_remote(session,
+addr)`` or ``session.export("remote", addr=...)``) as a tracer *sink*:
+every drained+folded chunk the tracer appends to its store is also handed
+to the sink, which frames it (:mod:`repro.fleet.wire`) and ships it from a
+background sender thread.  The capture hot path never blocks on the
+network: the hand-off is a bounded queue, and only when the queue is full
+does the *drain* (not the probes) wait — backpressure — or, with
+``drop_when_full=True``, the chunk is dropped and counted like a full BPF
+ring.  The sender reconnects with backoff on socket errors; a reconnect
+re-handshakes, bumping the clock-sync epoch, and never loses the chunk it
+was holding.
+
+Consumer side — :class:`IngestServer` accepts any number of producer
+connections, performs the HELLO/WELCOME handshake (allocating the host
+index and the clock offset: declared by the producer, or measured as
+``t_server − t_client``), remaps host-local tag/stack ids into the
+fleet-wide registries via the incremental TAGS/STACKS sync frames, and
+pushes normalized chunks into its :class:`~repro.fleet.aggregate.FleetSource`
+hub — which a :class:`~repro.core.session.ProfileSession` drains like any
+other source.  One server + one session = a fleet-wide
+:class:`~repro.core.detector.BottleneckReport` with host provenance.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+import uuid
+from collections import deque
+
+import numpy as np
+
+from repro.core.exporters import register_exporter
+from repro.fleet import wire
+from repro.fleet.aggregate import FleetSource, HostStream
+
+
+def _grow_map(arr: np.ndarray | None, idx: int) -> np.ndarray:
+    """Ensure ``arr[idx]`` exists (new cells are identity-mapped)."""
+    if arr is None:
+        arr = np.arange(0, dtype=np.int32)
+    if idx >= arr.shape[0]:
+        new = np.arange(max(idx + 1, 2 * arr.shape[0] + 1), dtype=np.int32)
+        new[:arr.shape[0]] = arr
+        arr = new
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# producer: RemoteSink
+# ---------------------------------------------------------------------------
+
+class RemoteSink:
+    """Stream a session's drained chunks to an :class:`IngestServer`.
+
+    Attach via :func:`attach_remote` / ``session.export("remote", ...)``;
+    or hand-construct and append to ``tracer.sinks``.  ``clock_offset_ns``
+    is the *declared* offset of this host's capture clock to the fleet
+    clock; the default ``None`` lets the server measure one from the
+    handshake — capture clocks (``perf_counter_ns``) have unrelated bases
+    across machines, so declaring 0 is only correct for co-located
+    producers sharing a clock (tests/benchmarks pass it explicitly).
+    """
+
+    _CLOSE = object()
+
+    def __init__(self, addr: tuple[str, int], host_id: str, *,
+                 num_workers=0, worker_names=None, tags=None, stacks=None,
+                 clock=time.perf_counter_ns,
+                 clock_offset_ns: int | None = None,
+                 max_buffer_chunks: int = 256, drop_when_full: bool = False,
+                 reconnect_delay: float = 0.05, max_reconnects: int = 64,
+                 connect_timeout: float = 5.0):
+        self.addr = tuple(addr)
+        self.host_id = str(host_id)
+        self._num_workers = num_workers          # int or () -> int
+        self._worker_names = worker_names        # list or () -> list
+        self.tags = tags
+        self.stacks = stacks
+        self.clock = clock
+        self.clock_offset_ns = clock_offset_ns
+        self.drop_when_full = drop_when_full
+        self.reconnect_delay = float(reconnect_delay)
+        self.max_reconnects = int(max_reconnects)
+        self.connect_timeout = float(connect_timeout)
+        self._q: deque = deque()
+        self._q_cap = max(int(max_buffer_chunks), 1)
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+        self._drained = threading.Condition(self._lock)
+        self._pending = 0           # chunks enqueued or in-flight
+        self._closing = False
+        self._thread: threading.Thread | None = None
+        self.host_index: int | None = None
+        self.epoch: int | None = None
+        self._seq = 0               # chunk sequence, NOT reset on reconnect:
+        #                             the server dedups retransmits by it
+        self.instance = uuid.uuid4().hex    # capture nonce (see wire HELLO)
+        self._tags_sent = 0
+        self._stacks_sent = 0
+        # counters
+        self.rows_sent = 0
+        self.chunks_sent = 0
+        self.dropped_chunks = 0
+        self.reconnects = 0
+        self.send_errors = 0
+        self.last_error: Exception | None = None
+        self.failed = False
+
+    # -- store-interface intake (called under the tracer's fold lock) --------
+    def append_columns(self, times, workers, deltas, tags, stacks) -> None:
+        if len(times) == 0:
+            return
+        item = tuple(np.asarray(c) for c in
+                     (times, workers, deltas, tags, stacks))
+        with self._lock:
+            if self._closing:
+                self.dropped_chunks += 1
+                return
+            while len(self._q) >= self._q_cap and not self.failed:
+                if self.drop_when_full:
+                    self.dropped_chunks += 1
+                    return
+                self._not_full.wait(0.05)       # backpressure on the drain
+            if self.failed:
+                self.dropped_chunks += 1
+                return
+            self._q.append(item)
+            self._pending += 1
+            self._not_empty.notify()
+
+    def __len__(self) -> int:
+        return self.rows_sent
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return sum(sum(c.nbytes for c in item) for item in self._q
+                       if item is not self._CLOSE)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "RemoteSink":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name=f"gapp-sink-{self.host_id}")
+            self._thread.start()
+        return self
+
+    def spill(self) -> None:
+        """Flush barrier (store-interface parity): block until every
+        enqueued chunk has been sent (or the sink failed/closed)."""
+        self.flush()
+
+    def flush(self, timeout: float | None = 10.0) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._pending > 0 and not self.failed:
+                rem = None if deadline is None else deadline - time.monotonic()
+                if rem is not None and rem <= 0:
+                    return False
+                self._drained.wait(0.05 if rem is None else min(rem, 0.05))
+            return not self.failed
+
+    def close(self, timeout: float | None = 10.0) -> None:
+        """Flush, send BYE, stop the sender."""
+        with self._lock:
+            if self._closing:
+                pass
+            else:
+                self._closing = True
+                self._q.append(self._CLOSE)
+                self._not_empty.notify()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def stats(self) -> dict:
+        return {"host_id": self.host_id, "rows_sent": self.rows_sent,
+                "chunks_sent": self.chunks_sent,
+                "dropped_chunks": self.dropped_chunks,
+                "reconnects": self.reconnects,
+                "send_errors": self.send_errors, "failed": self.failed}
+
+    # -- sender thread -------------------------------------------------------
+    def _resolve(self, v, default):
+        if v is None:
+            return default
+        return v() if callable(v) else v
+
+    def _connect(self):
+        sock = socket.create_connection(self.addr,
+                                        timeout=self.connect_timeout)
+        sock.settimeout(self.connect_timeout)
+        f = sock.makefile("rwb")
+        nw = int(self._resolve(self._num_workers, 0))
+        names = list(self._resolve(self._worker_names,
+                                   [f"w{i}" for i in range(nw)]))
+        f.write(wire.encode_hello(self.host_id, nw, names,
+                                  t_client_ns=int(self.clock()),
+                                  clock_offset_ns=self.clock_offset_ns,
+                                  instance=self.instance))
+        f.flush()
+        frame = wire.read_frame(f)
+        if frame is None or frame[0] != wire.WELCOME:
+            raise wire.WireError("no WELCOME after HELLO")
+        w = wire.decode_json(frame[1])
+        self.host_index = int(w["host_index"])
+        self.epoch = int(w["epoch"])
+        return sock, f
+
+    def _sync_registries(self, f) -> tuple[int, int]:
+        """Write any registry deltas; returns the (tags, stacks) high-water
+        marks to COMMIT only after the whole batch flushes — a frame lost
+        to a mid-send failure must be retransmitted after reconnect."""
+        tags_n, stacks_n = self._tags_sent, self._stacks_sent
+        if self.tags is not None:
+            # lock-free read of the live registry: locations is appended
+            # *second* under the registry lock, so its length is the safe
+            # fully-published high-water mark
+            n = min(len(self.tags.names), len(self.tags.locations))
+            if n > tags_n:
+                f.write(wire.encode_tags(
+                    [(i, self.tags.names[i], self.tags.locations[i])
+                     for i in range(tags_n, n)]))
+                tags_n = n
+        if self.stacks is not None:
+            n = len(self.stacks.paths)
+            if n > stacks_n:
+                f.write(wire.encode_stacks(
+                    [(i, self.stacks.paths[i])
+                     for i in range(stacks_n, n)]))
+                stacks_n = n
+        return tags_n, stacks_n
+
+    def _run(self) -> None:
+        sock = f = None
+        item = None
+        attempts = 0
+        while True:
+            try:
+                if f is None:       # connect eagerly: handshake ASAP so the
+                    #                 server learns this host before data
+                    if attempts > 0:
+                        time.sleep(min(self.reconnect_delay * attempts, 1.0))
+                    sock, f = self._connect()
+                    if attempts > 0:
+                        self.reconnects += 1
+                        # the server keeps the per-host registry maps, but a
+                        # fresh server would not: stay incremental (same
+                        # server) — a lost server is a failed sink anyway
+                    attempts = 0
+                if item is None:
+                    with self._lock:
+                        if not self._q:
+                            self._not_empty.wait(0.25)
+                        if self._q:
+                            item = self._q.popleft()
+                            self._not_full.notify_all()
+                    if item is None:
+                        continue
+                if item is self._CLOSE:
+                    f.write(wire.encode_bye(self.rows_sent, self.chunks_sent))
+                    f.flush()
+                    break
+                tags_n, stacks_n = self._sync_registries(f)
+                f.write(wire.encode_chunk(self.host_index or 0,
+                                          wire.MERGED_SHARD, self.epoch or 0,
+                                          self._seq, *item))
+                f.flush()
+                # commit only after the flush: a flush() that raised is
+                # retransmitted whole after reconnect — the CHUNK with the
+                # SAME seq (server dedups), the registry deltas again
+                # (interning is idempotent server-side)
+                self._tags_sent, self._stacks_sent = tags_n, stacks_n
+                self._seq += 1
+                self.rows_sent += len(item[0])
+                self.chunks_sent += 1
+                with self._lock:
+                    self._pending -= 1
+                    self._drained.notify_all()
+                item = None
+            except (OSError, wire.WireError) as e:   # reconnect w/ backoff
+                self.send_errors += 1
+                self.last_error = e
+                if f is not None:
+                    try:
+                        f.close()
+                        sock.close()
+                    except OSError:
+                        pass
+                    f = sock = None
+                attempts += 1
+                if attempts > self.max_reconnects:
+                    self._fail()
+                    return
+            except Exception as e:      # noqa: BLE001 — a sender-thread bug
+                # must not leave the sink half-alive: a dead thread with
+                # failed=False would let backpressured append_columns spin
+                # forever under the tracer's fold lock
+                self.send_errors += 1
+                self.last_error = e
+                self._fail()
+                return
+        try:
+            f.close()
+            sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            self._drained.notify_all()
+
+    def _fail(self) -> None:
+        with self._lock:
+            self.failed = True
+            self._pending = 0
+            self._q.clear()
+            self._not_full.notify_all()
+            self._drained.notify_all()
+
+
+def attach_remote(session, addr: tuple[str, int], *, host_id: str | None = None,
+                  **kw) -> RemoteSink:
+    """Wire a live session's drain output to an :class:`IngestServer`.
+
+    The sink is appended to the tracer's ``sinks`` (every drained chunk is
+    forwarded after it lands in the local store) and started.  Register all
+    workers *before* attaching, so the HELLO worker table is complete.
+    Returns the sink; call ``sink.close()`` after ``session.close()`` to
+    flush and say BYE.
+
+    ``host_id`` must be unique per logical producer (the server treats a
+    repeated id as the same host reconnecting and retires its previous
+    stream); the default is collision-proof.
+    """
+    tracer = session._live()
+    sink = RemoteSink(
+        addr,
+        host_id or f"{socket.gethostname()}:{uuid.uuid4().hex[:10]}",
+        num_workers=lambda: tracer.total_count,
+        worker_names=lambda: tracer.worker_names(),
+        tags=tracer.tags, stacks=tracer.stacks, clock=tracer.clock,
+        **kw)
+    sink.start()
+    tracer.sinks.append(sink)
+    return sink
+
+
+@register_exporter("remote", capabilities={"subscription", "push", "live",
+                                           "fleet"})
+def _export_remote(rep, *, session=None, addr=None, **kw):
+    """``session.export("remote", addr=(host, port))`` — subscription
+    exporter: attaches a :class:`RemoteSink` and returns it (no report is
+    consumed)."""
+    if session is None or addr is None:
+        raise ValueError("remote exporter needs session= and addr=")
+    return attach_remote(session, addr, **kw)
+
+
+# ---------------------------------------------------------------------------
+# consumer: IngestServer
+# ---------------------------------------------------------------------------
+
+class _HostState:
+    """Server-side per-host bookkeeping (maps live on the HostStream)."""
+
+    def __init__(self, stream: HostStream, instance: str):
+        self.stream = stream
+        self.instance = instance    # capture nonce; changes on restart
+        self.epoch = 0
+        self.next_seq = 0           # dedup floor across reconnects
+        self.rows_declared: int | None = None
+        self.got_bye = False
+        # serializes frame handling across overlapping connections of the
+        # same host (an old handler may still drain its socket while the
+        # reconnect's handler is live): epoch/seq check-and-commit and the
+        # stream push must be one atomic step or a retransmit can fold
+        # twice / out of order
+        self.lock = threading.Lock()
+
+
+class IngestServer:
+    """Threaded ingest endpoint: N producer connections → one FleetSource.
+
+    ::
+
+        server = IngestServer()            # binds 127.0.0.1:<ephemeral>
+        server.start()
+        sess = ProfileSession(server.source, n_min=2.0)
+        sess.start()
+        ...                                 # RemoteSinks connect & stream
+        server.wait_idle()                  # every producer said BYE
+        rep = sess.result()                 # fleet-wide report
+        server.close()
+    """
+
+    def __init__(self, addr: tuple[str, int] = ("127.0.0.1", 0), *,
+                 source: FleetSource | None = None, tags=None, stacks=None,
+                 chunk_events: int = 1 << 16, backlog: int = 16,
+                 clock=time.time_ns):
+        self.source = source if source is not None else FleetSource(
+            tags=tags, stacks=stacks, chunk_events=chunk_events)
+        self.clock = clock
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind(tuple(addr))
+        self._sock.listen(backlog)
+        self._sock.settimeout(0.1)
+        self.address: tuple[str, int] = self._sock.getsockname()[:2]
+        self._accept_thread: threading.Thread | None = None
+        self._conn_threads: list[threading.Thread] = []
+        self._hosts: dict[str, _HostState] = {}
+        self._lock = threading.Lock()
+        # leaf lock for bare counters: safe to take under st.lock (taking
+        # self._lock there would ABBA-deadlock with _register_host, which
+        # holds self._lock and then takes st.lock)
+        self._stats_lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._open_conns = 0
+        self._stopped = threading.Event()
+        # counters
+        self.connections = 0
+        self.stale_chunks = 0
+        self.duplicate_chunks = 0
+        self.lost_chunks = 0
+        self.bad_rows = 0
+        self.proto_errors = 0
+        self.worker_growth_rejected = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "IngestServer":
+        if self._accept_thread is None:
+            self.source.accepting = True
+            self._accept_thread = threading.Thread(
+                target=self._accept_loop, daemon=True, name="gapp-ingest")
+            self._accept_thread.start()
+        return self
+
+    def __enter__(self) -> "IngestServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stop(self) -> None:
+        """Stop accepting; existing connections drain to EOF.  The fleet
+        chunk stream can then end once every host finished."""
+        self._stopped.set()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=2.0)
+            self._accept_thread = None
+        self.source.accepting = False
+        self.source.notify()
+
+    def close(self) -> None:
+        self.stop()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        for t in list(self._conn_threads):
+            t.join(timeout=2.0)
+        self.source.notify()
+
+    def finish_host(self, host_id: str) -> bool:
+        """Operator override: retire a host that died without BYE (its
+        unfinished stream otherwise pins the merge watermark and healthy
+        hosts' chunks buffer until ``request_stop``)."""
+        with self._lock:
+            st = self._hosts.get(host_id)
+        if st is None:
+            return False
+        st.stream.finish()
+        self.source.notify()
+        return True
+
+    def wait_idle(self, timeout: float | None = 10.0) -> bool:
+        """Block until every host that ever connected said BYE and no
+        connection remains open.  True on success."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while True:
+                done = (self._open_conns == 0 and self._hosts
+                        and all(h.got_bye for h in self._hosts.values()))
+                if done:
+                    return True
+                rem = None if deadline is None else deadline - time.monotonic()
+                if rem is not None and rem <= 0:
+                    return False
+                self._idle.wait(0.05 if rem is None else min(rem, 0.05))
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = {
+                "address": list(self.address),
+                "connections": self.connections,
+                "open_connections": self._open_conns,
+                "hosts": len(self._hosts),
+                "stale_chunks": self.stale_chunks,
+                "duplicate_chunks": self.duplicate_chunks,
+                "lost_chunks": self.lost_chunks,
+                "bad_rows": self.bad_rows,
+                "proto_errors": self.proto_errors,
+            }
+        out.update(self.source.stats())
+        return out
+
+    # -- accept/connection machinery -----------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stopped.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True, name="gapp-ingest-conn")
+            # prune finished handlers so a long-lived server with flaky,
+            # reconnecting producers doesn't accumulate dead Thread objects
+            self._conn_threads = [x for x in self._conn_threads
+                                  if x.is_alive()]
+            self._conn_threads.append(t)
+            with self._lock:
+                self.connections += 1
+                self._open_conns += 1
+            t.start()
+
+    def _register_host(self, hello: dict) -> _HostState:
+        host_id = str(hello["host_id"])
+        instance = str(hello.get("instance", ""))
+        declared = hello.get("clock_offset_ns")
+        offset = (int(declared) if declared is not None
+                  else int(self.clock()) - int(hello["t_client_ns"]))
+        with self._lock:
+            st = self._hosts.get(host_id)
+            if st is None:
+                stream = self.source.add_host(
+                    host_id, int(hello["num_workers"]),
+                    hello.get("worker_names"), clock_offset_ns=offset)
+                st = self._hosts[host_id] = _HostState(stream, instance)
+            else:                       # reconnect: new clock-sync epoch
+                with st.lock:
+                    st.epoch += 1
+                    st.stream.clock_offset_ns = offset
+                    st.got_bye = False
+                    st.stream.finished = False
+                    if instance != st.instance:
+                        # producer RESTART, not a reconnect: a fresh
+                        # capture numbers its chunks from 0 again — reset
+                        # the dedup floor or every new chunk would drop as
+                        # a retransmit
+                        st.instance = instance
+                        st.next_seq = 0
+                # workers registered since the first HELLO: grow the host's
+                # id space when it still owns the tail of the fleet range
+                # (growth of an interior host would collide with the next
+                # host's offsets — counted, rows filtered as bad_rows)
+                nw = int(hello["num_workers"])
+                if nw > st.stream.num_workers and not \
+                        self.source.try_grow_host(
+                            st.stream, nw, hello.get("worker_names")):
+                    self.worker_growth_rejected += 1
+        return st
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        conn.settimeout(30.0)
+        f = conn.makefile("rwb")
+        st: _HostState | None = None
+        try:
+            frame = wire.read_frame(f)
+            if frame is None or frame[0] != wire.HELLO:
+                raise wire.WireError("expected HELLO")
+            st = self._register_host(wire.decode_hello(frame[1]))
+            f.write(wire.encode_welcome(st.stream.index, st.epoch,
+                                        st.stream.clock_offset_ns))
+            f.flush()
+            while True:
+                frame = wire.read_frame(f)
+                if frame is None:
+                    break
+                kind, payload = frame
+                if kind == wire.CHUNK:
+                    self._on_chunk(st, wire.decode_chunk(payload))
+                elif kind == wire.TAGS:
+                    self._on_tags(st, wire.decode_json(payload))
+                elif kind == wire.STACKS:
+                    self._on_stacks(st, wire.decode_json(payload))
+                elif kind == wire.BYE:
+                    bye = wire.decode_json(payload)
+                    with self._lock:
+                        st.rows_declared = int(bye.get("rows_sent", -1))
+                        st.got_bye = True
+                    st.stream.finish()
+                    self.source.notify()
+                    break
+                else:
+                    raise wire.WireError(
+                        f"unexpected {wire.KIND_NAMES.get(kind, kind)}")
+        except (OSError, wire.WireError, KeyError, ValueError):
+            with self._lock:
+                self.proto_errors += 1
+        finally:
+            try:
+                f.close()
+                conn.close()
+            except OSError:
+                pass
+            with self._idle:
+                self._open_conns -= 1
+                self._idle.notify_all()
+            self.source.notify()
+
+    # -- frame handlers (serialized per host via st.lock) --------------------
+    def _on_tags(self, st: _HostState, obj: dict) -> None:
+        stream = st.stream
+        with st.lock:
+            for tid, name, loc in obj["entries"]:
+                stream.tag_map = _grow_map(stream.tag_map, int(tid))
+                stream.tag_map[int(tid)] = self.source.tags.intern(
+                    str(name), str(loc))
+
+    def _on_stacks(self, st: _HostState, obj: dict) -> None:
+        stream = st.stream
+        with st.lock:
+            for sid, path in obj["entries"]:
+                fleet_path = []
+                for t in path:
+                    stream.tag_map = _grow_map(stream.tag_map, int(t))
+                    fleet_path.append(int(stream.tag_map[int(t)]))
+                stream.stack_map = _grow_map(stream.stack_map, int(sid))
+                stream.stack_map[int(sid)] = self.source.stacks.intern(
+                    tuple(fleet_path))
+
+    def _on_chunk(self, st: _HostState, chunk: wire.ChunkFrame) -> None:
+        with st.lock:
+            # epoch/seq check + commit + push are one atomic step: an old
+            # connection's handler racing a reconnect's handler must not
+            # fold a retransmit twice or interleave pushes out of order
+            if chunk.epoch != st.epoch:
+                with self._stats_lock:
+                    self.stale_chunks += 1
+                return
+            if chunk.seq < st.next_seq:  # retransmit of a delivered chunk
+                with self._stats_lock:
+                    self.duplicate_chunks += 1
+                return
+            if chunk.seq > st.next_seq:
+                # a gap means chunks committed producer-side (flush reached
+                # the kernel) never arrived — e.g. lost in a reset before
+                # the server read them.  They are unrecoverable (the sink
+                # only retains the one in-flight chunk), so count them
+                # loudly: delivery is at-most-once with loss DETECTION,
+                # not exactly-once end-to-end
+                with self._stats_lock:
+                    self.lost_chunks += int(chunk.seq - st.next_seq)
+            st.next_seq = chunk.seq + 1
+            w = chunk.workers
+            bad = (w < 0) | (w >= st.stream.num_workers)
+            if bad.any():              # worker registered after HELLO
+                with self._stats_lock:
+                    self.bad_rows += int(bad.sum())
+                keep = ~bad
+                cols = tuple(c[keep] for c in chunk.columns)
+            else:
+                cols = chunk.columns
+            if len(cols[0]) == 0:
+                return
+            with self.source.cond:
+                st.stream.push(*cols)
+                self.source.cond.notify_all()

@@ -1,0 +1,279 @@
+"""Fleet wire format — versioned, length-prefixed binary event frames.
+
+One GAPP host streams its drained event chunks to an ingest server as a
+sequence of *frames* over any reliable byte stream (TCP in
+:mod:`repro.fleet.transport`, a file, a pipe).  The format is deliberately
+dumb: length-prefixed frames with a fixed header, JSON payloads for the
+low-rate control plane (handshake, registry sync) and the profiler's own
+redaction-free columnar layout — the exact five columns the fold consumes
+(``times/workers/deltas/tags/stacks``, the
+:class:`~repro.core.spill.SpillStore` block layout) — for the data plane,
+so decode on the server is five ``np.frombuffer`` calls and zero row loops.
+
+Frame header (8 bytes, little-endian)::
+
+    ┌──────┬───────┬────────────────┬─────────────┐
+    │ u8   │ u8    │ u16            │ u32         │
+    │ kind │ flags │ schema_version │ payload_len │
+    └──────┴───────┴────────────────┴─────────────┘
+
+``schema_version`` == :data:`WIRE_VERSION` (bump on breaking layout
+changes; a decoder must reject frames with a newer major).  ``flags`` is
+reserved (must be 0).
+
+Frame kinds and payloads:
+
+    ====== ========= ==================================================
+    kind   name      payload
+    ====== ========= ==================================================
+    0x01   HELLO     JSON — ``{"magic": "gapp-fleet", "wire_version",
+                     "host_id", "num_workers", "worker_names",
+                     "t_client_ns", "clock_offset_ns"}``; first frame of
+                     every connection.  ``t_client_ns`` is the host's
+                     capture clock sampled immediately before send;
+                     ``clock_offset_ns`` is the *declared* offset to the
+                     fleet clock (``null`` ⇒ the server measures
+                     ``t_server − t_client`` at receipt).
+    0x02   WELCOME   JSON — ``{"host_index", "epoch",
+                     "clock_offset_ns"}``; the server's reply.  ``epoch``
+                     is the clock-sync generation: every CHUNK must echo
+                     it, and a reconnect (new HELLO) advances it, so
+                     chunks timed under a stale offset are detectable.
+    0x03   CHUNK     binary — 24-byte chunk header ``<u16 host_index>
+                     <u16 shard_id> <u64 epoch> <u64 seq> <u32 nrows>``
+                     followed by the five columns, each ``nrows`` long, in
+                     order: ``times i64 · workers i32 · deltas i8 ·
+                     tags i32 · stacks i32`` (== one SpillStore block).
+                     ``shard_id`` 0xFFFF means "merged across shards"
+                     (what a drained tracer chunk is).  ``seq`` numbers
+                     the host's chunks from 0 across the whole capture
+                     (NOT reset on reconnect): the server drops
+                     already-seen sequence numbers (retransmits fold
+                     exactly once) and counts sequence gaps as
+                     ``lost_chunks`` (loss is detected, not recovered —
+                     the sink only retains its one in-flight chunk).
+    0x04   TAGS      JSON — ``{"entries": [[tag_id, name, location],…]}``
+                     incremental tag-registry sync; ids are host-local
+                     and must be sent before any CHUNK references them.
+    0x05   STACKS    JSON — ``{"entries": [[stack_id, [tag_id,…]],…]}``
+                     incremental call-path registry sync (host-local tag
+                     ids, caller→callee).
+    0x06   BYE       JSON — ``{"rows_sent", "chunks_sent"}`` final
+                     accounting; lets the server assert losslessness.
+    ====== ========= ==================================================
+
+Round-trip guarantee: ``decode_chunk(encode_chunk(c)) == c`` bit-exact for
+every column (dtype-preserving) — tested in ``tests/test_fleet_wire.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+import numpy as np
+
+WIRE_VERSION = 1
+MAGIC = "gapp-fleet"
+
+# frame kinds
+HELLO = 0x01
+WELCOME = 0x02
+CHUNK = 0x03
+TAGS = 0x04
+STACKS = 0x05
+BYE = 0x06
+
+KIND_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", CHUNK: "CHUNK",
+              TAGS: "TAGS", STACKS: "STACKS", BYE: "BYE"}
+
+# merged-across-shards sentinel for the CHUNK shard_id field
+MERGED_SHARD = 0xFFFF
+
+_FRAME_HEADER = struct.Struct("<BBHI")          # kind, flags, schema, len
+_CHUNK_HEADER = struct.Struct("<HHQQI")         # host, shard, epoch, seq, n
+
+# Column order and dtypes of one chunk — THE SpillStore block layout (one
+# shared definition, so the disk and wire formats cannot drift apart).
+from repro.core.spill import _COL_DTYPES as COL_DTYPES          # noqa: E402
+from repro.core.spill import _ROW_BYTES as ROW_BYTES            # noqa: E402
+
+# Refuse absurd frames before allocating (a corrupt length prefix must not
+# OOM the server): 64 MiB is ~3.2M rows, far above any drain chunk.
+MAX_PAYLOAD = 64 << 20
+
+
+class WireError(ValueError):
+    """Malformed or incompatible frame."""
+
+
+@dataclasses.dataclass
+class ChunkFrame:
+    """One decoded CHUNK: provenance header + the five event columns."""
+
+    host_index: int
+    shard_id: int
+    epoch: int
+    seq: int
+    times: np.ndarray      # int64[n]
+    workers: np.ndarray    # int32[n]
+    deltas: np.ndarray     # int8[n]
+    tags: np.ndarray       # int32[n]
+    stacks: np.ndarray     # int32[n]
+
+    def __len__(self) -> int:
+        return int(self.times.shape[0])
+
+    @property
+    def columns(self):
+        return (self.times, self.workers, self.deltas, self.tags,
+                self.stacks)
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def pack_frame(kind: int, payload: bytes) -> bytes:
+    """Frame ``payload`` with the 8-byte header."""
+    if len(payload) > MAX_PAYLOAD:
+        raise WireError(f"payload {len(payload)}B exceeds MAX_PAYLOAD")
+    return _FRAME_HEADER.pack(kind, 0, WIRE_VERSION, len(payload)) + payload
+
+
+def _read_exact(stream, n: int) -> bytes:
+    """Read exactly ``n`` bytes from a file-like/socket-file stream;
+    returns ``b""`` on clean EOF at a frame boundary, raises on a short
+    read mid-frame."""
+    buf = bytearray()
+    while len(buf) < n:
+        part = stream.read(n - len(buf))
+        if not part:
+            if not buf:
+                return b""
+            raise WireError(f"stream truncated mid-frame "
+                            f"({len(buf)}/{n} bytes)")
+        buf += part
+    return bytes(buf)
+
+
+def read_frame(stream) -> tuple[int, bytes] | None:
+    """Read one frame; ``None`` on clean EOF.  Validates header fields."""
+    hdr = _read_exact(stream, _FRAME_HEADER.size)
+    if not hdr:
+        return None
+    kind, flags, version, length = _FRAME_HEADER.unpack(hdr)
+    if flags != 0:
+        raise WireError(f"unknown flags 0x{flags:02x}")
+    if version != WIRE_VERSION:
+        raise WireError(f"wire version {version} != {WIRE_VERSION}")
+    if length > MAX_PAYLOAD:
+        raise WireError(f"frame length {length} exceeds MAX_PAYLOAD")
+    payload = _read_exact(stream, length) if length else b""
+    if length and not payload:
+        raise WireError("stream truncated before payload")
+    return kind, payload
+
+
+# ---------------------------------------------------------------------------
+# control plane (JSON payloads)
+# ---------------------------------------------------------------------------
+
+def encode_json(kind: int, obj: dict) -> bytes:
+    return pack_frame(kind, json.dumps(obj, separators=(",", ":"))
+                      .encode("utf-8"))
+
+
+def decode_json(payload: bytes) -> dict:
+    try:
+        obj = json.loads(payload.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"bad control payload: {e}") from None
+    if not isinstance(obj, dict):
+        raise WireError("control payload is not an object")
+    return obj
+
+
+def encode_hello(host_id: str, num_workers: int, worker_names: list[str],
+                 t_client_ns: int, clock_offset_ns: int | None,
+                 instance: str = "") -> bytes:
+    """``instance`` is a per-capture nonce: a *reconnect* of the same
+    capture repeats it (the server keeps the seq-dedup floor), while a
+    producer *restart* sends a fresh one (the floor resets — otherwise the
+    new capture's chunks would all be dropped as retransmits)."""
+    return encode_json(HELLO, {
+        "magic": MAGIC, "wire_version": WIRE_VERSION, "host_id": host_id,
+        "num_workers": int(num_workers), "worker_names": list(worker_names),
+        "t_client_ns": int(t_client_ns),
+        "clock_offset_ns": (None if clock_offset_ns is None
+                            else int(clock_offset_ns)),
+        "instance": str(instance),
+    })
+
+
+def decode_hello(payload: bytes) -> dict:
+    obj = decode_json(payload)
+    if obj.get("magic") != MAGIC:
+        raise WireError(f"bad magic {obj.get('magic')!r}")
+    if obj.get("wire_version") != WIRE_VERSION:
+        raise WireError(f"wire version {obj.get('wire_version')} "
+                        f"!= {WIRE_VERSION}")
+    return obj
+
+
+def encode_welcome(host_index: int, epoch: int, clock_offset_ns: int) -> bytes:
+    return encode_json(WELCOME, {"host_index": int(host_index),
+                                 "epoch": int(epoch),
+                                 "clock_offset_ns": int(clock_offset_ns)})
+
+
+def encode_tags(entries: list[tuple[int, str, str]]) -> bytes:
+    return encode_json(TAGS, {"entries": [[int(i), n, loc]
+                                          for i, n, loc in entries]})
+
+
+def encode_stacks(entries: list[tuple[int, tuple[int, ...]]]) -> bytes:
+    return encode_json(STACKS, {"entries": [[int(i), [int(t) for t in p]]
+                                            for i, p in entries]})
+
+
+def encode_bye(rows_sent: int, chunks_sent: int) -> bytes:
+    return encode_json(BYE, {"rows_sent": int(rows_sent),
+                             "chunks_sent": int(chunks_sent)})
+
+
+# ---------------------------------------------------------------------------
+# data plane (columnar CHUNK payloads)
+# ---------------------------------------------------------------------------
+
+def encode_chunk(host_index: int, shard_id: int, epoch: int, seq: int,
+                 times, workers, deltas, tags, stacks) -> bytes:
+    """Frame one columnar event chunk (the drained-batch layout)."""
+    cols = [np.ascontiguousarray(c, dt) for c, dt in
+            zip((times, workers, deltas, tags, stacks), COL_DTYPES)]
+    n = len(cols[0])
+    for c in cols:
+        if len(c) != n:
+            raise WireError("chunk columns misaligned")
+    payload = b"".join(
+        [_CHUNK_HEADER.pack(host_index, shard_id, epoch, seq, n)]
+        + [c.tobytes() for c in cols])
+    return pack_frame(CHUNK, payload)
+
+
+def decode_chunk(payload: bytes) -> ChunkFrame:
+    """Inverse of :func:`encode_chunk` — bit-exact columns, no row loops."""
+    if len(payload) < _CHUNK_HEADER.size:
+        raise WireError("chunk payload shorter than its header")
+    host, shard, epoch, seq, n = _CHUNK_HEADER.unpack_from(payload)
+    expect = _CHUNK_HEADER.size + n * ROW_BYTES
+    if len(payload) != expect:
+        raise WireError(f"chunk payload {len(payload)}B != expected "
+                        f"{expect}B for {n} rows")
+    off = _CHUNK_HEADER.size
+    cols = []
+    for dt in COL_DTYPES:
+        nbytes = n * np.dtype(dt).itemsize
+        cols.append(np.frombuffer(payload, dt, count=n, offset=off).copy())
+        off += nbytes
+    return ChunkFrame(host, shard, epoch, seq, *cols)

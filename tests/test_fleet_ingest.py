@@ -1,0 +1,443 @@
+"""Fleet ingest: offline spill-file merge is bit-equal to the offline
+oracle; a real-socket 2-producer ingest reproduces the offline merge of the
+same events; host provenance flows into text/json/chrome exporters."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EventLog, ProfileSession, SpillStore, detect_offline,
+                        export, synthetic_log)
+from repro.core.tracer import StackRegistry, TagRegistry
+from repro.fleet import FleetSource, IngestServer, RemoteSink, attach_remote
+from tests.test_tracer import FakeClock
+
+
+def _write_spill(path, log, chunk_events=64):
+    st = SpillStore(str(path), chunk_events=chunk_events)
+    st.append_columns(log.times, log.workers, log.deltas, log.tags,
+                      log.stacks)
+    st.close()
+
+
+def _merge_remapped(logs, offsets):
+    """The oracle merge: concat with global worker ids, one stable lexsort
+    with the shard tie-break keys (time, then DEACTIVATE first, then id)."""
+    cols = [np.concatenate([l.times for l in logs]),
+            np.concatenate([(l.workers + o).astype(np.int32)
+                            for l, o in zip(logs, offsets)]),
+            np.concatenate([l.deltas for l in logs]),
+            np.concatenate([l.tags for l in logs]),
+            np.concatenate([l.stacks for l in logs])]
+    order = np.lexsort((cols[1], cols[2], cols[0]))
+    return EventLog(*[c[order] for c in cols],
+                    num_workers=sum(l.num_workers for l in logs))
+
+
+def _ranked(rep):
+    return [(rep.path_str(p), p.cmetric, p.slices) for p in rep.paths]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: offline spill-file ingest, bit-equal to the merged oracle
+# ---------------------------------------------------------------------------
+
+def test_from_files_bit_equal_to_merged_detect_offline(tmp_path):
+    rng = np.random.default_rng(0)
+    nws = (3, 2, 4)
+    logs, paths = [], []
+    for i, nw in enumerate(nws):
+        log = synthetic_log(rng, nw, 60)
+        p = tmp_path / f"h{i}.spill"
+        _write_spill(p, log)
+        logs.append(log)
+        paths.append(str(p))
+    merged = _merge_remapped(logs, np.cumsum([0] + list(nws[:-1])))
+    oracle = detect_offline(merged, TagRegistry(), StackRegistry(),
+                            n_min=3.0)
+    # worker counts are pre-scanned from the raw files; chunk size is
+    # unrelated to the spill block size on purpose
+    src = FleetSource.from_files(paths, chunk_events=97)
+    assert src.num_workers == sum(nws)
+    rep = ProfileSession(src, n_min=3.0).result()
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert rep.total_slices == oracle.total_slices
+    assert rep.total_critical == oracle.total_critical
+    assert rep.idle_time == oracle.idle_time
+    assert rep.total_time == oracle.total_time
+    assert _ranked(rep) == _ranked(oracle)
+    np.testing.assert_array_equal(rep.critical_table.cm,
+                                  oracle.critical_table.cm)
+    np.testing.assert_array_equal(rep.critical_table.threads_av,
+                                  oracle.critical_table.threads_av)
+    np.testing.assert_array_equal(rep.critical_table.worker,
+                                  oracle.critical_table.worker)
+    # provenance: every worker is attributed to its source file's host
+    assert rep.worker_hosts == ["h0"] * 3 + ["h1"] * 2 + ["h2"] * 4
+    assert rep.hosts == ["h0", "h1", "h2"]
+
+
+def test_from_files_background_worker_and_full_log(tmp_path):
+    rng = np.random.default_rng(5)
+    logs, paths = [], []
+    for i in range(3):
+        log = synthetic_log(rng, 2, 40)
+        _write_spill(tmp_path / f"f{i}.spill", log, chunk_events=32)
+        logs.append(log)
+        paths.append(str(tmp_path / f"f{i}.spill"))
+    merged = _merge_remapped(logs, [0, 2, 4])
+    # full_log materializes the same merge
+    full = FleetSource.from_files(paths).full_log()
+    for col in ("times", "workers", "deltas", "tags", "stacks"):
+        np.testing.assert_array_equal(getattr(full, col), getattr(merged, col))
+    # background worker path (start() then result())
+    s = ProfileSession(FleetSource.from_files(paths), n_min=1.5)
+    s.start()
+    rep = s.result()
+    oracle = detect_offline(merged, TagRegistry(), StackRegistry(), 1.5)
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert rep.total_slices == oracle.total_slices
+
+
+def test_from_files_clock_offsets_normalize(tmp_path):
+    """A host whose clock runs 5ms ahead is corrected by its declared
+    offset: the report equals the one from aligned captures."""
+    rng = np.random.default_rng(9)
+    a = synthetic_log(rng, 2, 50)
+    b = synthetic_log(rng, 2, 50)
+    skew = 5_000_000
+    b_skewed = EventLog(b.times + skew, b.workers, b.deltas, b.tags,
+                        b.stacks, b.num_workers)
+    _write_spill(tmp_path / "a.spill", a)
+    _write_spill(tmp_path / "b.spill", b_skewed)
+    src = FleetSource.from_files(
+        [str(tmp_path / "a.spill"), str(tmp_path / "b.spill")],
+        clock_offsets_ns=[0, -skew])
+    rep = ProfileSession(src, n_min=2.0).result()
+    oracle = detect_offline(_merge_remapped([a, b], [0, 2]),
+                            TagRegistry(), StackRegistry(), 2.0)
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert rep.total_slices == oracle.total_slices
+    assert _ranked(rep) == _ranked(oracle)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real-socket 2-producer ingest == offline merge of same events
+# ---------------------------------------------------------------------------
+
+def _produce(server_addr, host_index):
+    """One producer host: live session + RemoteSink, deterministic clock."""
+    clk = FakeClock()
+    clk.t = host_index * 137            # interleave timestamps across hosts
+    s = ProfileSession(n_min=2.0, clock=clk, drain_interval=0.001)
+    wids = [s.register_worker(f"t{i}") for i in range(2)]
+    sink = attach_remote(s, server_addr, host_id=f"host{host_index}",
+                         clock_offset_ns=0)
+    return s, wids, clk, sink
+
+
+def test_socket_two_producer_ingest_matches_offline_merge():
+    server = IngestServer()
+    server.start()
+    fleet_sess = ProfileSession(server.source, n_min=2.0)
+    fleet_sess.start()
+    try:
+        # attach sequentially: host index (== worker-offset order) follows
+        # HELLO arrival, so registration order must be pinned for the
+        # oracle comparison below
+        prods = []
+        for hi in range(2):
+            prods.append(_produce(server.address, hi))
+            deadline = time.time() + 5
+            while (server.stats()["hosts"] < hi + 1
+                   and time.time() < deadline):
+                time.sleep(0.01)
+        assert server.stats()["hosts"] == 2, server.stats()
+        assert [h.host_id for h in server.source.hosts] == ["host0",
+                                                            "host1"]
+
+        logs = []
+        for (s, wids, clk, sink) in prods:
+            with s.running():
+                for _ in range(250):
+                    s.begin(wids[0], "step")
+                    clk.advance(1000)
+                    s.begin(wids[1], "io")
+                    clk.advance(1000)
+                    s.end(wids[1])
+                    clk.advance(700)
+                    s.end(wids[0])
+                    clk.advance(300)
+            s.result()
+            logs.append((s.freeze(), s.tags, s.stacks))
+        for (_, _, _, sink) in prods:
+            sink.close()
+            assert not sink.failed and sink.dropped_chunks == 0
+        assert server.wait_idle(10), server.stats()
+        rep = fleet_sess.result()
+    finally:
+        server.close()
+
+    # oracle: remap each producer's frozen log into one shared registry,
+    # concat with global worker ids, sort with the tie-break keys
+    otags, ostacks = TagRegistry(), StackRegistry()
+    remapped = []
+    for (log, tags, stacks) in logs:
+        tmap = np.asarray([otags.intern(n, loc) for n, loc in
+                           zip(tags.names, tags.locations)], np.int32)
+        smap = np.asarray(
+            [ostacks.intern(tuple(int(tmap[t]) for t in p))
+             for p in stacks.paths], np.int32)
+        g = log.tags.copy()
+        v = g >= 0
+        g[v] = tmap[g[v]]
+        st = log.stacks.copy()
+        v = st >= 0
+        st[v] = smap[st[v]]
+        remapped.append(EventLog(log.times, log.workers, log.deltas, g, st,
+                                 log.num_workers))
+    merged = _merge_remapped(remapped, [0, 2])
+    oracle = detect_offline(merged, otags, ostacks, n_min=2.0)
+
+    assert server.stats()["proto_errors"] == 0
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert rep.total_slices == oracle.total_slices
+    assert rep.total_critical == oracle.total_critical
+    assert rep.idle_time == oracle.idle_time
+    assert _ranked(rep) == _ranked(oracle)
+    assert rep.worker_hosts == ["host0", "host0", "host1", "host1"]
+    assert rep.worker_names[0] == "host0/t0"
+
+
+# ---------------------------------------------------------------------------
+# exporters render host lanes
+# ---------------------------------------------------------------------------
+
+def _fleet_report(tmp_path):
+    rng = np.random.default_rng(3)
+    logs, paths = [], []
+    for i in range(2):
+        log = synthetic_log(rng, 2, 30)
+        _write_spill(tmp_path / f"e{i}.spill", log)
+        logs.append(log)
+        paths.append(str(tmp_path / f"e{i}.spill"))
+    s = ProfileSession(FleetSource.from_files(paths), n_min=2.0)
+    rep = s.result()
+    full = FleetSource.from_files(paths).full_log()
+    return s, rep, full
+
+
+def test_text_and_json_exporters_render_host_lanes(tmp_path):
+    s, rep, _ = _fleet_report(tmp_path)
+    txt = s.export("text", max_paths=1)
+    assert "per-host CMetric" in txt
+    assert "e0" in txt and "e1" in txt
+    d = json.loads(s.export("json"))
+    assert d["schema_version"] >= 3
+    assert d["worker_hosts"] == ["e0", "e0", "e1", "e1"]
+    assert set(d["per_host"]) == {"e0", "e1"}
+    assert d["per_host"]["e0"]["workers"] == 2
+    ph = rep.per_host()
+    assert abs(sum(h["cmetric_s"] for h in ph.values())
+               - float(rep.per_worker.sum())) < 1e-12
+
+
+def test_chrome_exporter_renders_host_process_lanes(tmp_path):
+    _, rep, full = _fleet_report(tmp_path)
+    trace = json.loads(export(rep, "chrome", log=full))
+    procs = {e["pid"]: e["args"]["name"] for e in trace["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert procs[0] == "e0" and procs[1] == "e1"
+    # workers of host e1 (global ids 2,3) live in pid 1
+    span_pids = {e["tid"]: e["pid"] for e in trace["traceEvents"]
+                 if e.get("ph") == "X" and e["name"] != "CRITICAL"}
+    for tid, pid in span_pids.items():
+        assert pid == (0 if tid < 2 else 1)
+
+
+def test_single_host_reports_unchanged(tmp_path):
+    """No worker_hosts => no host lanes anywhere (back-compat)."""
+    rng = np.random.default_rng(1)
+    log = synthetic_log(rng, 4, 30)
+    s = ProfileSession.offline(log, n_min=2.0)
+    rep = s.result()
+    assert rep.worker_hosts is None and rep.per_host() == {}
+    assert "per-host CMetric" not in s.export("text")
+    assert "worker_hosts" not in json.loads(s.export("json"))
+
+
+# ---------------------------------------------------------------------------
+# transport robustness
+# ---------------------------------------------------------------------------
+
+def test_remote_exporter_lazy_registration():
+    """session.export("remote", ...) resolves through the lazy registry
+    and fails cleanly without addr."""
+    from repro.core.exporters import get_exporter
+    exp = get_exporter("remote")
+    assert "subscription" in exp.capabilities
+    s = ProfileSession(n_min=1.0, clock=FakeClock())
+    with pytest.raises(ValueError):
+        s.export("remote")          # no addr
+
+
+def test_remote_exporter_attaches_sink():
+    server = IngestServer()
+    server.start()
+    try:
+        clk = FakeClock()
+        s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+        w = s.register_worker("w")
+        sink = s.export("remote", addr=server.address, host_id="solo",
+                        clock_offset_ns=0)
+        assert isinstance(sink, RemoteSink)
+        assert sink in s.tracer.sinks
+        for _ in range(20):
+            s.begin(w, "x")
+            clk.advance(1000)
+            s.end(w)
+            clk.advance(500)
+        s.result()                  # close() flushes attached sinks
+        sink.close()
+        assert sink.rows_sent == 40
+        deadline = time.time() + 5
+        while (server.source.stats()["rows_in"] < 40
+               and time.time() < deadline):
+            time.sleep(0.01)
+        assert server.source.stats()["rows_in"] == 40
+    finally:
+        server.close()
+
+
+def test_sink_fails_closed_when_server_unreachable():
+    sink = RemoteSink(("127.0.0.1", 1), "nope", max_reconnects=2,
+                      reconnect_delay=0.01, connect_timeout=0.2)
+    sink.start()
+    z = [np.zeros(1, dt) for dt in
+         (np.int64, np.int32, np.int8, np.int32, np.int32)]
+    sink.append_columns(*z)
+    deadline = time.time() + 10
+    while not sink.failed and time.time() < deadline:
+        time.sleep(0.01)
+    assert sink.failed and sink.send_errors >= 1
+    # once failed, appends drop (never block the tracer) and flush returns
+    sink.append_columns(*z)
+    assert sink.dropped_chunks >= 1
+    assert sink.flush(timeout=1.0) is False or sink.failed
+    sink.close(timeout=1.0)
+
+
+def test_backpressure_drop_mode_counts(tmp_path):
+    """drop_when_full=True sheds chunks instead of stalling the drain."""
+    sink = RemoteSink(("127.0.0.1", 1), "shed", max_buffer_chunks=1,
+                      drop_when_full=True, max_reconnects=10**6,
+                      reconnect_delay=5.0, connect_timeout=0.05)
+    # no start(): the queue can never drain, so the second append must drop
+    z = [np.zeros(1, dt) for dt in
+         (np.int64, np.int32, np.int8, np.int32, np.int32)]
+    sink.append_columns(*z)
+    sink.append_columns(*z)
+    assert sink.dropped_chunks == 1
+
+
+def test_ingest_server_dedups_retransmitted_chunks():
+    """A chunk resent after a flaky send (same seq) must fold once: the
+    server drops already-seen sequence numbers, so the reconnect
+    retransmit path is exactly-once."""
+    import socket as socket_mod
+    from repro.fleet import wire
+    server = IngestServer()
+    server.start()
+    try:
+        sock = socket_mod.create_connection(server.address, timeout=5)
+        f = sock.makefile("rwb")
+        f.write(wire.encode_hello("dup-host", 1, ["w0"], t_client_ns=0,
+                                  clock_offset_ns=0))
+        f.flush()
+        kind, payload = wire.read_frame(f)
+        assert kind == wire.WELCOME
+        epoch = wire.decode_json(payload)["epoch"]
+        cols = (np.asarray([10, 20], np.int64), np.zeros(2, np.int32),
+                np.asarray([1, -1], np.int8), np.full(2, -1, np.int32),
+                np.full(2, -1, np.int32))
+        chunk = wire.encode_chunk(0, wire.MERGED_SHARD, epoch, 0, *cols)
+        f.write(chunk)
+        f.write(chunk)              # retransmit, same seq
+        f.write(wire.encode_bye(rows_sent=2, chunks_sent=1))
+        f.flush()
+        deadline = time.time() + 5
+        while (not server.stats()["duplicate_chunks"]
+               and time.time() < deadline):
+            time.sleep(0.01)
+        st = server.stats()
+        assert st["duplicate_chunks"] == 1
+        assert st["rows_in"] == 2   # folded once, not twice
+        f.close()
+        sock.close()
+    finally:
+        server.close()
+
+
+def test_producer_restart_with_stable_host_id_not_deduped():
+    """A restarted producer (fresh RemoteSink, same host_id) carries a new
+    instance nonce: the server resets the seq-dedup floor instead of
+    dropping the new capture's chunks as retransmits."""
+    server = IngestServer()
+    server.start()
+    try:
+        for run in range(2):
+            clk = FakeClock()
+            clk.t = run * 10_000_000
+            s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+            w = s.register_worker("w")
+            sink = attach_remote(s, server.address, host_id="stable",
+                                 clock_offset_ns=0)
+            for _ in range(10):
+                s.begin(w, "x")
+                clk.advance(1000)
+                s.end(w)
+                clk.advance(1000)
+            s.result()
+            sink.close()
+            assert sink.rows_sent == 20
+        assert server.wait_idle(10), server.stats()
+        st = server.stats()
+        assert st["hosts"] == 1
+        assert st["duplicate_chunks"] == 0
+        assert st["rows_in"] == 40          # both captures ingested
+    finally:
+        server.close()
+
+
+def test_ingest_server_measures_clock_offset():
+    """clock_offset_ns=None in HELLO: the server derives the offset from
+    the handshake and applies it to ingested times."""
+    server = IngestServer(clock=lambda: 1_000_000)
+    server.start()
+    try:
+        clk = FakeClock()
+        clk.t = 500                       # producer clock epoch
+        s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+        w = s.register_worker("w")
+        sink = attach_remote(s, server.address, host_id="skewed",
+                             clock_offset_ns=None)
+        deadline = time.time() + 5
+        while not server.stats()["hosts"] and time.time() < deadline:
+            time.sleep(0.01)
+        measured = server.source.hosts[0].clock_offset_ns
+        # t_client was sampled at 500 on the fake clock
+        assert measured == 1_000_000 - 500
+        s.begin(w, "x")
+        clk.advance(100)
+        s.end(w)
+        s.result()
+        sink.close()
+        assert server.wait_idle(5)
+        fleet_rep = ProfileSession(server.source, n_min=1.0).result()
+        assert fleet_rep.total_slices == 1
+        h = server.source.hosts[0]
+        assert h.rows_in == 2
+    finally:
+        server.close()

@@ -1,0 +1,119 @@
+"""Wire format: frame round-trips, version/length validation, chunk
+encode/decode bit-exactness."""
+import io
+import struct
+
+import numpy as np
+import pytest
+
+from repro.fleet import wire
+
+
+def _roundtrip(raw: bytes):
+    return wire.read_frame(io.BytesIO(raw))
+
+
+def test_chunk_roundtrip_bit_exact():
+    rng = np.random.default_rng(0)
+    n = 257
+    times = rng.integers(0, 2**62, n).astype(np.int64)
+    workers = rng.integers(0, 64, n).astype(np.int32)
+    deltas = rng.choice([-1, 1], n).astype(np.int8)
+    tags = rng.integers(-1, 100, n).astype(np.int32)
+    stacks = rng.integers(-1, 50, n).astype(np.int32)
+    raw = wire.encode_chunk(3, wire.MERGED_SHARD, 7, 42, times, workers,
+                            deltas, tags, stacks)
+    kind, payload = _roundtrip(raw)
+    assert kind == wire.CHUNK
+    c = wire.decode_chunk(payload)
+    assert (c.host_index, c.shard_id, c.epoch, c.seq) == \
+        (3, wire.MERGED_SHARD, 7, 42)
+    assert len(c) == n
+    for got, want in zip(c.columns, (times, workers, deltas, tags, stacks)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def test_chunk_roundtrip_empty():
+    z = [np.zeros(0, dt) for dt in wire.COL_DTYPES]
+    kind, payload = _roundtrip(wire.encode_chunk(0, 5, 0, 0, *z))
+    c = wire.decode_chunk(payload)
+    assert len(c) == 0 and c.shard_id == 5
+
+
+def test_chunk_misaligned_columns_rejected():
+    z = [np.zeros(3, dt) for dt in wire.COL_DTYPES]
+    z[2] = np.zeros(2, np.int8)
+    with pytest.raises(wire.WireError):
+        wire.encode_chunk(0, 0, 0, 0, *z)
+
+
+def test_chunk_payload_length_validated():
+    z = [np.zeros(4, dt) for dt in wire.COL_DTYPES]
+    _, payload = _roundtrip(wire.encode_chunk(0, 0, 0, 0, *z))
+    with pytest.raises(wire.WireError):
+        wire.decode_chunk(payload[:-1])
+    with pytest.raises(wire.WireError):
+        wire.decode_chunk(payload + b"\0")
+
+
+def test_hello_welcome_roundtrip():
+    raw = wire.encode_hello("hostA", 4, ["a", "b", "c", "d"],
+                            t_client_ns=123, clock_offset_ns=None)
+    kind, payload = _roundtrip(raw)
+    assert kind == wire.HELLO
+    h = wire.decode_hello(payload)
+    assert h["host_id"] == "hostA" and h["num_workers"] == 4
+    assert h["clock_offset_ns"] is None and h["t_client_ns"] == 123
+
+    kind, payload = _roundtrip(wire.encode_welcome(2, 1, -50))
+    assert kind == wire.WELCOME
+    w = wire.decode_json(payload)
+    assert w == {"host_index": 2, "epoch": 1, "clock_offset_ns": -50}
+
+
+def test_registry_sync_roundtrip():
+    kind, payload = _roundtrip(wire.encode_tags([(0, "a", "m:1"),
+                                                 (1, "b", "m:2")]))
+    assert kind == wire.TAGS
+    assert wire.decode_json(payload)["entries"] == [[0, "a", "m:1"],
+                                                    [1, "b", "m:2"]]
+    kind, payload = _roundtrip(wire.encode_stacks([(0, (1, 2)), (1, ())]))
+    assert kind == wire.STACKS
+    assert wire.decode_json(payload)["entries"] == [[0, [1, 2]], [1, []]]
+
+
+def test_bad_magic_and_version_rejected():
+    kind, payload = _roundtrip(wire.encode_json(wire.HELLO, {"magic": "x"}))
+    with pytest.raises(wire.WireError):
+        wire.decode_hello(payload)
+    # corrupt the schema_version field in the frame header
+    raw = bytearray(wire.encode_bye(0, 0))
+    struct.pack_into("<H", raw, 2, wire.WIRE_VERSION + 1)
+    with pytest.raises(wire.WireError):
+        _roundtrip(bytes(raw))
+
+
+def test_stream_truncation_detected():
+    raw = wire.encode_bye(10, 2)
+    assert _roundtrip(raw[:0]) is None          # clean EOF at boundary
+    with pytest.raises(wire.WireError):
+        _roundtrip(raw[:5])                      # mid-header
+    with pytest.raises(wire.WireError):
+        _roundtrip(raw[:-2])                     # mid-payload
+
+
+def test_oversized_frame_rejected_before_alloc():
+    hdr = struct.pack("<BBHI", wire.BYE, 0, wire.WIRE_VERSION,
+                      wire.MAX_PAYLOAD + 1)
+    with pytest.raises(wire.WireError):
+        _roundtrip(hdr)
+
+
+def test_multiple_frames_stream():
+    buf = io.BytesIO(wire.encode_bye(1, 1) + wire.encode_bye(2, 2))
+    k1, p1 = wire.read_frame(buf)
+    k2, p2 = wire.read_frame(buf)
+    assert wire.read_frame(buf) is None
+    assert (wire.decode_json(p1)["rows_sent"],
+            wire.decode_json(p2)["rows_sent"]) == (1, 2)

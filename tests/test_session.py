@@ -408,6 +408,129 @@ def test_spill_store_owns_its_file_and_readonly_replays(tmp_path):
     assert SpillStore.open_readonly(path).rows_on_disk == 8
 
 
+# ---------------------------------------------------------------------------
+# per-shard decode budget (max_rows_per_sync)
+# ---------------------------------------------------------------------------
+
+def test_max_rows_per_sync_bounds_snapshot_decode_and_final_is_exact():
+    """With a decode budget, a mid-capture snapshot folds at most one
+    budget's worth per shard (bounded latency, lagging report); close()
+    consumes the backlog so the final report is complete and bit-equal to
+    the offline oracle."""
+    clk = FakeClock()
+    budget = 64
+    s = ProfileSession(n_min=1.5, clock=clk, capacity=1 << 15,
+                       max_rows_per_sync=budget)
+    w = [s.register_worker(f"w{i}") for i in range(2)]
+    pairs = 2000
+    for _ in range(pairs):
+        s.begin(w[0], "a")
+        clk.advance(1000)
+        s.begin(w[1], "b")
+        clk.advance(1000)
+        s.end(w[1])
+        clk.advance(500)
+        s.end(w[0])
+        clk.advance(500)
+    total = 4 * pairs
+    assert s.tracer.ring.pending() == total
+    mid = s.snapshot()                  # one budgeted flush only
+    folded = total - s.tracer.ring.pending()
+    assert 0 < folded <= budget * 2     # <= budget per shard
+    assert mid.total_slices <= folded
+    rep = s.result()                    # close(): full sync, then seal
+    assert s.tracer.ring.pending() == 0
+    assert rep.total_slices == 2 * pairs
+    log = s.freeze()
+    log.validate()
+    res = compute_numpy(log)
+    np.testing.assert_array_equal(res.per_worker, rep.per_worker)
+    assert len(log) == total
+
+
+def test_max_rows_per_sync_skewed_shards_times_not_clamped():
+    """A sparse worker next to a dense one: capped drains must not merge
+    the sparse shard's far future with the dense shard's past — the time
+    frontier trims each take, so the accumulated log keeps the exact
+    original timestamps (no monotonic-clamp distortion)."""
+    clk = FakeClock()
+    s = ProfileSession(n_min=1.0, clock=clk, capacity=1 << 15,
+                       max_rows_per_sync=64, autoflush=False)
+    dense = s.register_worker("dense")
+    sparse = s.register_worker("sparse")
+    expected = []
+    for i in range(800):
+        if i % 160 == 0:            # sparse worker fires rarely
+            s.begin(sparse, "s")
+            expected.append((clk.t, sparse, 1))
+            clk.advance(50)
+            s.end(sparse)
+            expected.append((clk.t, sparse, -1))
+            clk.advance(50)
+        s.begin(dense, "d")
+        expected.append((clk.t, dense, 1))
+        clk.advance(100)
+        s.end(dense)
+        expected.append((clk.t, dense, -1))
+        clk.advance(100)
+    rep = s.result()
+    log = s.freeze()
+    log.validate()
+    assert len(log) == len(expected)
+    exp = sorted(range(len(expected)), key=lambda i: expected[i][0])
+    np.testing.assert_array_equal(log.times,
+                                  [expected[i][0] for i in exp])
+    np.testing.assert_array_equal(log.workers,
+                                  [expected[i][1] for i in exp])
+    res = compute_numpy(log)
+    np.testing.assert_array_equal(res.per_worker, rep.per_worker)
+
+
+def test_max_rows_per_sync_full_sync_still_complete():
+    """Tracer.sync() stays exhaustive under a budget: it bites the backlog
+    off in budget-sized flushes instead of one unbounded decode."""
+    clk = FakeClock()
+    s = ProfileSession(n_min=1.0, clock=clk, max_rows_per_sync=32)
+    w = s.register_worker("w")
+    for _ in range(500):
+        s.begin(w, "x")
+        clk.advance(100)
+        s.end(w)
+        clk.advance(100)
+    s.tracer.sync()
+    assert s.tracer.ring.pending() == 0
+    assert s.stats()["events_folded"] == 1000
+
+
+# ---------------------------------------------------------------------------
+# deprecated-wrapper gap: chunk_events reaches the offline session
+# ---------------------------------------------------------------------------
+
+def test_profile_log_forwards_chunk_events(monkeypatch):
+    """profile_log(chunk_events=...) must stream the replay through
+    bounded chunks — pin the forwarding and the result equivalence."""
+    from repro.core import profile_log
+    from repro.core.session import LogSource
+    rng = np.random.default_rng(13)
+    log = synthetic_log(rng, 4, 120)
+    seen = []
+    orig = LogSource.chunks
+
+    def spy(self):
+        for part in orig(self):
+            seen.append(len(part))
+            yield part
+    monkeypatch.setattr(LogSource, "chunks", spy)
+    oracle = detect_offline(log, TagRegistry(), StackRegistry(), n_min=2.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rep = profile_log(log, TagRegistry(), StackRegistry(), n_min=2.0,
+                          sample_dt_ns=None, chunk_events=77)
+    assert seen and max(seen) <= 77 and sum(seen) == len(log)
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert _ranked(rep) == _ranked(oracle)
+
+
 def test_dump_chrome_trace_accepts_sessions(tmp_path):
     from repro.core import dump_chrome_trace
     s = _tiny_live_session()

@@ -1,0 +1,125 @@
+"""SpillStore.open_readonly edge cases: truncated tail blocks, the
+zero-flushed-byte watermark, and readers opened mid-write."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import SpillStore, synthetic_log
+
+
+def _fill(path, log, chunk_events=64):
+    st = SpillStore(str(path), chunk_events=chunk_events)
+    st.append_columns(log.times, log.workers, log.deltas, log.tags,
+                      log.stacks)
+    st.close()
+    return st
+
+
+def test_truncated_tail_block_ignored(tmp_path):
+    """A capture cut mid-block (power loss, copy-in-flight) must replay
+    every complete block and silently drop the torn tail."""
+    log = synthetic_log(np.random.default_rng(0), 2, 96)   # 384 rows
+    path = tmp_path / "t.spill"
+    _fill(path, log, chunk_events=64)                       # 6 full blocks
+    size = os.path.getsize(path)
+    # chop into the payload of the last block
+    with open(path, "r+b") as f:
+        f.truncate(size - 40)
+    ro = SpillStore.open_readonly(str(path), 64)
+    assert ro.rows_on_disk == 5 * 64
+    chunks = list(ro.iter_chunks(log.num_workers))
+    assert sum(len(c) for c in chunks) == 5 * 64
+    back = ro.freeze(log.num_workers)
+    np.testing.assert_array_equal(back.times, log.times[:5 * 64])
+
+
+def test_truncated_inside_header_ignored(tmp_path):
+    log = synthetic_log(np.random.default_rng(1), 2, 64)
+    path = tmp_path / "h.spill"
+    _fill(path, log, chunk_events=64)
+    with open(path, "ab") as f:
+        f.write(b"\x07\x00\x00")        # 3 bytes of a phantom next header
+    ro = SpillStore.open_readonly(str(path), 64)
+    assert ro.rows_on_disk == len(log)
+    assert len(ro.freeze(log.num_workers)) == len(log)
+
+
+def test_header_only_tail_with_missing_payload(tmp_path):
+    """A complete header whose payload never landed: the row count it
+    declares must not be trusted."""
+    log = synthetic_log(np.random.default_rng(2), 2, 64)
+    path = tmp_path / "p.spill"
+    _fill(path, log, chunk_events=64)
+    import struct
+    with open(path, "ab") as f:
+        f.write(struct.pack("<Q", 1 << 20))   # block claims 1M rows, no data
+    ro = SpillStore.open_readonly(str(path), 64)
+    assert ro.rows_on_disk == len(log)
+    assert len(ro.freeze(log.num_workers)) == len(log)
+    assert sum(len(c) for c in ro.iter_chunks(log.num_workers)) == len(log)
+
+
+def test_zero_flushed_bytes_watermark(tmp_path):
+    """Nothing flushed yet: a read-only open (missing file, empty file, or
+    a writer with only buffered rows) yields an empty stream, not an
+    error."""
+    missing = SpillStore.open_readonly(str(tmp_path / "nope.spill"))
+    assert len(missing) == 0
+    assert list(missing.iter_chunks(2)) == []
+    assert len(missing.freeze(2)) == 0
+
+    empty = tmp_path / "empty.spill"
+    empty.touch()
+    ro = SpillStore.open_readonly(str(empty))
+    assert ro.rows_on_disk == 0 and list(ro.iter_chunks(2)) == []
+
+    # writer holding everything in RAM: on-disk watermark is still zero
+    log = synthetic_log(np.random.default_rng(3), 2, 4)    # 16 rows < chunk
+    w = SpillStore(str(tmp_path / "buf.spill"), chunk_events=1024)
+    w.append_columns(log.times, log.workers, log.deltas, log.tags,
+                     log.stacks)
+    assert w.rows_on_disk == 0 and w.resident_rows == 16
+    ro2 = SpillStore.open_readonly(str(tmp_path / "buf.spill"))
+    assert len(ro2) == 0 and list(ro2.iter_chunks(2)) == []
+    w.close()
+
+
+def test_reader_opened_mid_write_sees_flushed_prefix_only(tmp_path):
+    """A reader attaching while the writer is live sees exactly the blocks
+    flushed at open time; later flushes appear to *new* readers without
+    disturbing the first one."""
+    log = synthetic_log(np.random.default_rng(4), 2, 96)   # 384 rows
+    path = str(tmp_path / "live.spill")
+    w = SpillStore(path, chunk_events=64)
+    c1 = log.chunk(0, 192)
+    w.append_columns(c1.times, c1.workers, c1.deltas, c1.tags, c1.stacks)
+    # 3 blocks on disk; nothing buffered
+    ro = SpillStore.open_readonly(path, 64)
+    assert ro.rows_on_disk == 192
+    first = list(ro.iter_chunks(log.num_workers))
+    assert sum(len(c) for c in first) == 192
+
+    c2 = log.chunk(192, 384)
+    w.append_columns(c2.times, c2.workers, c2.deltas, c2.tags, c2.stacks)
+    w.spill()
+    # the early reader's watermark is pinned at its open-time scan
+    assert ro.rows_on_disk == 192
+    again = list(ro.iter_chunks(log.num_workers))
+    assert sum(len(c) for c in again) == 192
+    # a fresh reader picks up the new flushed prefix
+    ro2 = SpillStore.open_readonly(path, 64)
+    assert ro2.rows_on_disk == 384
+    np.testing.assert_array_equal(ro2.freeze(log.num_workers).times,
+                                  log.times)
+    w.close()
+
+
+def test_readonly_store_rejects_appends(tmp_path):
+    log = synthetic_log(np.random.default_rng(5), 2, 8)
+    path = tmp_path / "ro.spill"
+    _fill(path, log)
+    ro = SpillStore.open_readonly(str(path))
+    with pytest.raises(ValueError):
+        ro.append_columns(log.times, log.workers, log.deltas, log.tags,
+                          log.stacks)
