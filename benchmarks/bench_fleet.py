@@ -1,29 +1,42 @@
 """Fleet ingest benchmark: localhost loopback, N producers → one report.
 
-Measures the new subsystem end-to-end on one machine:
+Measures the fleet subsystem end-to-end on one machine:
 
 * aggregate ingest throughput (events/s through RemoteSink → IngestServer
   → FleetSource merge → background fold) with all producers streaming
-  concurrently;
+  concurrently over the negotiated zlib wire;
 * the time from "all producers done" to the final fleet-wide report;
-* losslessness accounting (rows sent == rows ingested == rows folded).
+* wire-bytes savings of the compressed frames vs the raw columnar layout;
+* losslessness accounting — and, since every producer journals durably
+  and the server keeps per-host stores under a ``fleet_dir``, the
+  **ingest-vs-offline equality check**: the live fleet report must match
+  ``detect_offline`` over the merged journals exactly.
+
+This smoke is a CI **gate** (not report-only): any lost or duplicated
+chunk, or any divergence between the live merge and the offline replay
+of the journals, raises and fails the job.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import threading
 import time
 
-from repro.core import ProfileSession
-from repro.fleet import IngestServer, attach_remote
+import numpy as np
+
+from repro.core import ProfileSession, detect_offline
+from repro.fleet import FleetSource, IngestServer, attach_remote
 
 
-def _producer(server_addr, hi, seconds, counter, barrier):
+def _producer(server_addr, hi, seconds, counter, ready, journal):
     s = ProfileSession(n_min=1.0, drain_interval=0.002)
     wid = s.register_worker("w0")
     sink = attach_remote(s, server_addr, host_id=f"bench-host{hi}",
-                         clock_offset_ns=0)
+                         clock_offset_ns=0, journal=journal)
     h = s.handle(wid)
-    barrier.wait()
+    ready.wait(10.0)        # all HELLOs land before any rows stream, so
+    #                         the watermark covers every host (clamp-free)
     n = 0
     t_end = time.perf_counter() + seconds
     with s.running():
@@ -36,47 +49,98 @@ def _producer(server_addr, hi, seconds, counter, barrier):
     counter.append((2 * n, sink.rows_sent, sink.stats()))
 
 
+def _ranked(rep):
+    return [(rep.path_str(p), p.cmetric, p.slices) for p in rep.paths]
+
+
 def run_fleet(producers: int = 2, seconds: float = 1.0,
               chunk_events: int = 1 << 14) -> dict:
-    server = IngestServer(chunk_events=chunk_events)
+    work_dir = tempfile.mkdtemp(prefix="gapp-fleet-bench-")
+    server = IngestServer(chunk_events=chunk_events,
+                          fleet_dir=f"{work_dir}/fleet")
     server.start()
     sess = ProfileSession(server.source, n_min=1.0)
     sess.start()
     counter: list = []
-    barrier = threading.Barrier(producers)
+    ready = threading.Event()
     threads = [threading.Thread(target=_producer,
                                 args=(server.address, hi, seconds, counter,
-                                      barrier))
+                                      ready, f"{work_dir}/host{hi}.journal"))
                for hi in range(producers)]
-    t0 = time.perf_counter()
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    ingest_wall = time.perf_counter() - t0
-    idle_ok = server.wait_idle(30.0)
-    t1 = time.perf_counter()
-    rep = sess.result()
-    report_s = time.perf_counter() - t1
-    stats = server.stats()
-    server.close()
-    events = sum(c[0] for c in counter)
-    sent = sum(c[1] for c in counter)
-    return {
-        "producers": producers,
-        "seconds": seconds,
-        "events_captured": events,
-        "rows_sent": sent,
-        "rows_ingested": stats["rows_in"],
-        "ingest_events_per_s": events / max(ingest_wall, 1e-9),
-        "final_report_ms": report_s * 1e3,
-        "total_slices": rep.total_slices,
-        "hosts_reported": len(rep.hosts),
-        "lossless": bool(idle_ok and sent == stats["rows_in"]),
-        "clock_clamped": stats["clock_clamped"],
-        "stale_chunks": stats["stale_chunks"],
-        "proto_errors": stats["proto_errors"],
-    }
+    # teardown in finally: a failure anywhere must not leave the accept
+    # thread (or the session worker) alive to pin the CI job until its
+    # 45-minute timeout
+    try:
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        deadline = time.time() + 10
+        while server.stats()["hosts"] < producers and time.time() < deadline:
+            time.sleep(0.005)
+        ready.set()
+        for t in threads:
+            t.join()
+        ingest_wall = time.perf_counter() - t0
+        idle_ok = server.wait_idle(30.0)
+        t1 = time.perf_counter()
+        rep = sess.result()
+        report_s = time.perf_counter() - t1
+        stats = server.stats()
+
+        events = sum(c[0] for c in counter)
+        sent = sum(c[1] for c in counter)
+        wire_bytes = sum(c[2]["wire_bytes"] for c in counter)
+        raw_bytes = sum(c[2]["raw_bytes"] for c in counter)
+        codecs = sorted({c[2]["codec"] for c in counter})
+
+        # ingest-vs-offline equality: replay the server's durable per-host
+        # stores and recompute offline — the live watermark merge must be
+        # bit-equal (numpy backend on both sides)
+        offline_src = FleetSource.from_fleet_dir(f"{work_dir}/fleet",
+                                                 chunk_events=chunk_events)
+        merged = offline_src.full_log()
+        oracle = detect_offline(merged, offline_src.tags, offline_src.stacks,
+                                n_min=1.0)
+        np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+        assert rep.total_slices == oracle.total_slices, \
+            (rep.total_slices, oracle.total_slices)
+        assert rep.total_critical == oracle.total_critical
+        assert rep.idle_time == oracle.idle_time
+        assert _ranked(rep) == _ranked(oracle)
+
+        # losslessness gate: every produced row arrived exactly once
+        assert idle_ok, f"producers never went idle: {stats}"
+        assert sent == stats["rows_in"], (sent, stats["rows_in"])
+        assert stats["lost_chunks"] == 0, stats
+        assert stats["duplicate_chunks"] == 0, stats
+        assert stats["proto_errors"] == 0, stats
+
+        return {
+            "producers": producers,
+            "seconds": seconds,
+            "events_captured": events,
+            "rows_sent": sent,
+            "rows_ingested": stats["rows_in"],
+            "ingest_events_per_s": events / max(ingest_wall, 1e-9),
+            "final_report_ms": report_s * 1e3,
+            "total_slices": rep.total_slices,
+            "hosts_reported": len(rep.hosts),
+            "lossless": True,               # asserted above
+            "offline_equal": True,          # asserted above
+            "wire_codecs": codecs,
+            "wire_bytes": wire_bytes,
+            "wire_raw_bytes": raw_bytes,
+            "wire_compression_ratio": raw_bytes / max(wire_bytes, 1),
+            "lost_chunks": stats["lost_chunks"],
+            "duplicate_chunks": stats["duplicate_chunks"],
+            "clock_clamped": stats["clock_clamped"],
+            "stale_chunks": stats["stale_chunks"],
+            "proto_errors": stats["proto_errors"],
+        }
+    finally:
+        sess.stop()
+        server.close()
+        shutil.rmtree(work_dir, ignore_errors=True)
 
 
 def main() -> None:

@@ -78,18 +78,23 @@ def smoke_session(threads: int, out: str) -> dict:
 
 def smoke_fleet(producers: int, out: str) -> dict:
     """Fleet-ingest smoke: localhost loopback, N producer sessions
-    streaming over real sockets into one IngestServer+FleetSource session
+    streaming compressed frames over real sockets — with durable journals
+    on both ends — into one IngestServer+FleetSource session
     (``python -m benchmarks.run --smoke fleet`` -> BENCH_fleet.json).
-    Report-only in CI: throughput, final-report latency, losslessness."""
+    GATED in CI: losslessness (zero lost/duplicate chunks) and
+    ingest-vs-offline equality are asserted inside the benchmark, so any
+    regression fails the run instead of printing a warning."""
     from benchmarks import bench_fleet
     res = bench_fleet.run_fleet(producers=producers)
     res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
     with open(out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"# fleet ingest: {res['producers']} producers, "
-          f"{res['ingest_events_per_s']:.0f} ev/s over loopback, "
+          f"{res['ingest_events_per_s']:.0f} ev/s over loopback "
+          f"({res['wire_compression_ratio']:.1f}x wire compression), "
           f"final report {res['final_report_ms']:.1f} ms, "
-          f"lossless={res['lossless']} -> {out}")
+          f"lossless={res['lossless']} "
+          f"offline_equal={res['offline_equal']} -> {out}")
     return res
 
 

@@ -43,7 +43,8 @@ _DEFAULT_KEYS = {
     "probe": ("+speedup_1t", "+speedup_mt"),
     "detect": ("+speedup",),
     "session": ("+ram_events_per_s", "capped_snapshot_ms"),
-    "fleet": ("+ingest_events_per_s", "final_report_ms"),
+    "fleet": ("+ingest_events_per_s", "final_report_ms",
+              "+wire_compression_ratio"),
 }
 
 

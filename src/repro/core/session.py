@@ -33,6 +33,15 @@ drained chunk to an append-only file — resident event memory stays
 O(``chunk_events``) for arbitrarily long runs (the two streaming items on
 the ROADMAP: overlap drain/fold with capture, bound ``freeze()`` memory).
 
+Fleet wiring rides the same shapes: ``session.export("remote",
+addr=(host, port), journal=path)`` attaches a durable
+:class:`~repro.fleet.transport.RemoteSink` (the journal makes producer
+restarts resumable — see :mod:`repro.fleet.transport`), a
+:class:`~repro.fleet.aggregate.FleetSource` — live from an
+``IngestServer``, or replayed via ``FleetSource.from_files`` /
+``FleetSource.from_fleet_dir`` — plugs in as this session's source, and
+:meth:`stats` surfaces per-sink transport counters for dashboards.
+
 Typical live use::
 
     with ProfileSession(n_min=None, dt=0.003) as s:
@@ -573,7 +582,7 @@ class ProfileSession:
         if self.source.live:
             tr = self.tracer
             store = tr.store
-            return {
+            out = {
                 "mode": "live",
                 "events_folded": self._folded,
                 "events_pending": tr.ring.pending(),
@@ -586,6 +595,11 @@ class ProfileSession:
                 "samples": self.probe.stats(),
                 "watch_errors": len(self.watch_errors),
             }
+            sinks = [s.stats() for s in getattr(tr, "sinks", None) or []
+                     if hasattr(s, "stats")]
+            if sinks:       # attached transports (e.g. fleet RemoteSinks)
+                out["sinks"] = sinks
+            return out
         return {
             "mode": "offline",
             "events_folded": self._folded,

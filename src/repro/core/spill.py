@@ -32,6 +32,14 @@ whole, and every read bounds itself to the flushed-byte watermark taken
 under the store lock.  A writer store *owns* its file for one capture
 (an existing file at the path is truncated at construction); use
 :meth:`SpillStore.open_readonly` to replay a finished capture.
+
+The same block framing doubles as the fleet **journal** format
+(:mod:`repro.fleet.transport`): :meth:`SpillStore.open_append` re-opens
+an existing file *without* truncating history (a torn tail block — a
+crash mid-append — is cut back to the last complete block, so the resume
+floor is exact), and :meth:`append_block` writes one caller-framed block
+per call with no re-blocking, which pins the invariant journals rely on:
+**block index == append order == chunk seq**.
 """
 from __future__ import annotations
 
@@ -59,7 +67,7 @@ class SpillStore:
     """
 
     def __init__(self, path: str, chunk_events: int = 1 << 16, *,
-                 _readonly: bool = False):
+                 _readonly: bool = False, _append: bool = False):
         self.path = str(path)
         self.chunk_events = max(int(chunk_events), 1)
         self._buf = [np.zeros(self.chunk_events, dt) for dt in _COL_DTYPES]
@@ -73,6 +81,15 @@ class SpillStore:
         self._lock = threading.Lock()
         if _readonly:
             self._scan_existing()
+        elif _append:
+            # journal mode: keep existing complete blocks, cut a torn tail
+            # back to the last block boundary so the next append starts at
+            # a clean frame (and the block count is an exact resume floor)
+            self._scan_existing()
+            if os.path.exists(self.path) \
+                    and os.path.getsize(self.path) > self._bytes_written:
+                with open(self.path, "r+b") as f:
+                    f.truncate(self._bytes_written)
         elif os.path.exists(self.path):
             # a writer store owns its file for exactly one capture: a stale
             # file from a previous run at the same path must not leak into
@@ -85,6 +102,15 @@ class SpillStore:
         """Open an existing spill file for replay (appends disabled; the
         file is NOT truncated — the writer-mode constructor is)."""
         return cls(path, chunk_events, _readonly=True)
+
+    @classmethod
+    def open_append(cls, path: str,
+                    chunk_events: int = 1 << 16) -> "SpillStore":
+        """Open a journal: existing complete blocks are kept (a torn tail
+        from a crash mid-append is truncated away), and new
+        :meth:`append_block` calls extend the file — resuming the
+        block-index sequence exactly where the complete history ends."""
+        return cls(path, chunk_events, _append=True)
 
     def _scan_existing(self) -> None:
         """Index an existing file (read-only open): block/row counts come
@@ -112,20 +138,51 @@ class SpillStore:
                 self._bytes_written += _HEADER.size + n * _ROW_BYTES
 
     # -- write side ----------------------------------------------------------
-    def _write_block(self, n: int) -> None:
-        """Flush the first ``n`` buffered rows as one framed block."""
-        if n == 0:
-            return
+    def _write_cols(self, cols, n: int) -> None:
+        """Frame ``n`` rows of ``cols`` as one block (caller holds the
+        lock)."""
         if self._file is None:
             self._file = open(self.path, "ab")
         self._file.write(_HEADER.pack(n))
-        for col in self._buf:
+        for col in cols:
             self._file.write(col[:n].tobytes())
         self._file.flush()          # readers bound themselves to flushed bytes
         self._rows_on_disk += n
         self._blocks += 1
         self._bytes_written += _HEADER.size + n * _ROW_BYTES
+
+    def _write_block(self, n: int) -> None:
+        """Flush the first ``n`` buffered rows as one framed block."""
+        if n == 0:
+            return
+        self._write_cols(self._buf, n)
         self._buf_len = 0
+
+    def append_block(self, times, workers, deltas, tags, stacks,
+                     sync: bool = False) -> int:
+        """Journal append: write the given rows as exactly ONE block (no
+        re-blocking through the resident buffer), flushed before return so
+        the block survives a PROCESS crash when the caller hands the chunk
+        onward.  ``sync=True`` additionally fsyncs, extending the guarantee
+        to power loss — at a per-block fsync cost the hot ingest path
+        usually cannot afford (the fleet transports expose this as an
+        opt-in).  Returns the block index — with every append routed
+        through here, block index == append order, which the fleet
+        journals equate with the chunk ``seq``."""
+        if self._closed:
+            raise ValueError(f"SpillStore({self.path}) is closed")
+        cols = tuple(np.ascontiguousarray(c, dt) for c, dt in
+                     zip((times, workers, deltas, tags, stacks),
+                         _COL_DTYPES))
+        n = len(cols[0])
+        with self._lock:
+            # keep disk order == append order if buffered rows exist (a
+            # pure journal never mixes the two paths)
+            self._write_block(self._buf_len)
+            self._write_cols(cols, n)
+            if sync:
+                os.fsync(self._file.fileno())
+            return self._blocks - 1
 
     def append_columns(self, times, workers, deltas, tags, stacks) -> None:
         e = len(times)
@@ -155,10 +212,13 @@ class SpillStore:
                 self._file.flush()
 
     def close(self) -> None:
-        """Flush and close the write handle; reads remain available."""
+        """Flush and close the write handle; reads remain available.  A
+        closed file is fsynced once, so a cleanly sealed capture/journal
+        survives power loss even without per-block ``sync``."""
         self.spill()
         with self._lock:
             if self._file is not None:
+                os.fsync(self._file.fileno())
                 self._file.close()
                 self._file = None
             self._closed = True
@@ -170,6 +230,11 @@ class SpillStore:
     @property
     def rows_on_disk(self) -> int:
         return self._rows_on_disk
+
+    @property
+    def blocks(self) -> int:
+        """Complete blocks on disk (== the next append_block index)."""
+        return self._blocks
 
     @property
     def resident_rows(self) -> int:
@@ -200,10 +265,21 @@ class SpillStore:
         with self._lock:
             return self._bytes_written
 
-    def _read_blocks(self, limit: int) -> Iterator[tuple[np.ndarray, ...]]:
+    def _read_blocks(self, limit: int,
+                     skip: int = 0) -> Iterator[tuple[np.ndarray, ...]]:
         if limit <= 0 or not os.path.exists(self.path):
             return
         with open(self.path, "rb") as f:
+            while skip > 0 and f.tell() < limit:
+                # skipped blocks are seeked over, not decoded: a journal
+                # replay of a long capture's tail must not re-read (and
+                # re-allocate) gigabytes of acked prefix on every reconnect
+                hdr = f.read(_HEADER.size)
+                if len(hdr) < _HEADER.size:
+                    return
+                (n,) = _HEADER.unpack(hdr)
+                f.seek(n * _ROW_BYTES, os.SEEK_CUR)
+                skip -= 1
             while f.tell() < limit:
                 hdr = f.read(_HEADER.size)
                 if len(hdr) < _HEADER.size:
@@ -216,6 +292,16 @@ class SpillStore:
                         return      # torn tail beyond the watermark: stop
                     cols.append(np.frombuffer(raw, dt).copy())
                 yield tuple(cols)
+
+    def iter_block_columns(self, skip: int = 0) \
+            -> Iterator[tuple[np.ndarray, ...]]:
+        """Raw column tuples, one per complete block, skipping the first
+        ``skip`` blocks — the journal replay reader (block index == chunk
+        seq, so ``skip=ack_seq`` yields exactly the unacked tail; the
+        acked prefix is seeked over, not decoded).  Safe against a
+        concurrent :meth:`append_block` writer: bounded to the
+        flushed-byte watermark at call time."""
+        yield from self._read_blocks(self._read_limit(), skip)
 
     def iter_chunks(self, num_workers: int) -> Iterator[EventLog]:
         """Stream the store back as :class:`EventLog` blocks, oldest first.

@@ -24,13 +24,15 @@ loads it lazily on first use.
 """
 from repro.fleet.aggregate import FleetSource, HostStream
 from repro.fleet.transport import IngestServer, RemoteSink, attach_remote
-from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD,
-                              WIRE_VERSION, WireError, decode_chunk,
-                              encode_chunk, pack_frame, read_frame)
+from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD, RAW,
+                              SUPPORTED_CODECS, WIRE_VERSION, ZLIB,
+                              WireError, decode_chunk, encode_chunk,
+                              negotiate_codec, pack_frame, read_frame)
 
 __all__ = [
     "FleetSource", "HostStream", "IngestServer", "RemoteSink",
     "attach_remote", "WIRE_VERSION", "WireError", "ChunkFrame",
     "encode_chunk", "decode_chunk", "pack_frame", "read_frame",
-    "CHUNK", "HELLO", "MERGED_SHARD",
+    "CHUNK", "HELLO", "MERGED_SHARD", "RAW", "ZLIB", "SUPPORTED_CODECS",
+    "negotiate_codec",
 ]

@@ -35,6 +35,8 @@ lossless.
 """
 from __future__ import annotations
 
+import glob
+import json
 import os
 import threading
 from collections import deque
@@ -48,6 +50,68 @@ from repro.core.spill import SpillStore
 from repro.core.tracer import StackRegistry, TagRegistry
 
 _COLS = 5   # times, workers, deltas, tags, stacks
+
+
+def write_json_atomic(path: str, obj: dict) -> None:
+    """Meta sidecars are rewritten in place; neither a crash mid-write
+    nor a power loss right after the rename may leave a torn or empty
+    JSON (the resume paths trust it), hence the fsync before the replace.
+    The tmp name carries the thread id so racing writers (overlapping
+    connections of one host) cannot interleave into one tmp file."""
+    tmp = f"{path}.{threading.get_ident()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_json(path: str) -> dict | None:
+    """Tolerant meta read: a missing, torn or non-object file is simply
+    'no meta' — both the server resume and from_fleet_dir must classify
+    such files identically or live and offline replay diverge.
+    ValueError covers both JSONDecodeError and the UnicodeDecodeError
+    a binary-corrupted file raises."""
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+        return obj if isinstance(obj, dict) else None
+    except (OSError, ValueError):
+        return None
+
+
+def _grow_idmap(arr: np.ndarray | None, idx: int) -> np.ndarray:
+    """Ensure ``arr[idx]`` exists (new cells are identity-mapped)."""
+    if arr is None:
+        arr = np.arange(0, dtype=np.int32)
+    if idx >= arr.shape[0]:
+        new = np.arange(max(idx + 1, 2 * arr.shape[0] + 1), dtype=np.int32)
+        new[:arr.shape[0]] = arr
+        arr = new
+    return arr
+
+
+def restore_host_maps(host: "HostStream", tags: TagRegistry,
+                      stacks: StackRegistry, tag_entries,
+                      stack_entries) -> None:
+    """Rebuild a host's registry maps from persisted meta entries (lists
+    indexed by host-local id; ``None`` holes are skipped) by interning
+    into the fleet registries — the one algorithm behind both the
+    server's restart resume and :meth:`FleetSource.from_fleet_dir`."""
+    for i, ent in enumerate(tag_entries or []):
+        if ent is None:
+            continue
+        host.tag_map = _grow_idmap(host.tag_map, i)
+        host.tag_map[i] = tags.intern(str(ent[0]), str(ent[1]))
+    for i, path in enumerate(stack_entries or []):
+        if path is None:
+            continue
+        fleet_path = []
+        for t in path:
+            host.tag_map = _grow_idmap(host.tag_map, int(t))
+            fleet_path.append(int(host.tag_map[int(t)]))
+        host.stack_map = _grow_idmap(host.stack_map, i)
+        host.stack_map[i] = stacks.intern(tuple(fleet_path))
 
 
 def _remap_ids(col: np.ndarray, idmap: np.ndarray | None) -> np.ndarray:
@@ -204,9 +268,10 @@ class FleetSource(EventSource):
         # every current host finished (file mode leaves it False, so the
         # stream ends when the last file is drained)
         self.accepting = False
-        # from_files records its inputs here so full_log() can re-open the
-        # files instead of consuming the live feeds
+        # from_files/from_fleet_dir record their inputs here so full_log()
+        # can re-open the files instead of consuming the live feeds
         self._file_recipe: dict | None = None
+        self._dir_recipe: dict | None = None
 
     # -- host management -----------------------------------------------------
     def add_host(self, host_id: str, num_workers: int,
@@ -314,15 +379,65 @@ class FleetSource(EventSource):
         }
         return src
 
+    @classmethod
+    def from_fleet_dir(cls, fleet_dir: str, *,
+                       tags: TagRegistry | None = None,
+                       stacks: StackRegistry | None = None,
+                       chunk_events: int = 1 << 16) -> "FleetSource":
+        """Re-open an :class:`~repro.fleet.transport.IngestServer`'s
+        durable per-host stores (``IngestServer(fleet_dir=...)``): one
+        journal + meta sidecar per host.  The meta carries everything the
+        raw spill blocks don't — host identity and order, worker table,
+        clock offset, and the host-local tag/stack registry entries — so
+        the replayed merge resolves names and normalizes exactly like the
+        live ingest did: the merged log is the union of everything the
+        server accepted."""
+        metas = []
+        for mp in sorted(glob.glob(os.path.join(str(fleet_dir),
+                                                "*.meta.json"))):
+            m = load_json(mp)
+            if m and m.get("journal"):
+                m["_journal_path"] = os.path.join(os.path.dirname(mp),
+                                                  m["journal"])
+                metas.append(m)
+        metas.sort(key=lambda m: int(m.get("host_index", 0)))
+        src = cls(tags=tags, stacks=stacks, chunk_events=chunk_events)
+        for m in metas:
+            if not os.path.exists(m["_journal_path"]):
+                # a silent skip would drop the host's every row and void
+                # the merged-journals == live-report equality unnoticed
+                raise FileNotFoundError(
+                    f"fleet_dir meta for host {m.get('host_id')!r} "
+                    f"references missing journal {m['_journal_path']!r}")
+            store = SpillStore.open_readonly(m["_journal_path"],
+                                             chunk_events)
+            nw = int(m.get("num_workers", 0))
+            h = src.add_host(str(m.get("host_id", "host")), nw,
+                             m.get("worker_names"),
+                             clock_offset_ns=int(m.get("clock_offset_ns",
+                                                       0)),
+                             feed=_file_feed(store, nw))
+            restore_host_maps(h, src.tags, src.stacks, m.get("tags"),
+                              m.get("stacks"))
+        src._dir_recipe = {"fleet_dir": str(fleet_dir),
+                           "chunk_events": chunk_events}
+        return src
+
     def full_log(self) -> EventLog:
         """Materialize the merged fleet log.  File-backed sources re-open
         their files (repeatable, like LogSource/SpillSource — the session's
         feeds are untouched); a live ingest stream has no rewind."""
-        if self._file_recipe is None:
+        if self._file_recipe is not None:
+            fresh = FleetSource.from_files(**self._file_recipe)
+        elif self._dir_recipe is not None:
+            # share the registries: intern is name-keyed, so the re-read
+            # produces identical fleet tag/stack ids
+            fresh = FleetSource.from_fleet_dir(
+                **self._dir_recipe, tags=self.tags, stacks=self.stacks)
+        else:
             raise RuntimeError("full_log(): live ingest streams have no "
-                               "rewind (only FleetSource.from_files "
-                               "sources can re-materialize)")
-        fresh = FleetSource.from_files(**self._file_recipe)
+                               "rewind (only FleetSource.from_files / "
+                               "from_fleet_dir sources can re-materialize)")
         parts = list(fresh.chunks())
         if not parts:
             from repro.fleet.wire import COL_DTYPES

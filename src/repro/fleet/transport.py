@@ -13,18 +13,43 @@ ring.  The sender reconnects with backoff on socket errors; a reconnect
 re-handshakes, bumping the clock-sync epoch, and never loses the chunk it
 was holding.
 
+**Durable mode** (``journal=path``): every chunk is appended to a local
+:class:`~repro.core.spill.SpillStore`-layout journal — block index ==
+chunk ``seq`` — *before* it is queued for send, and every (re)connect
+replays ``[ack_seq, …)`` from that journal (the WELCOME ``ack_seq`` is
+the server's durable receive floor).  In-flight chunks lost to a broken
+connection, and even whole producer restarts, become recovered history:
+a fresh sink opened on the same journal resumes the capture's instance
+nonce, seq numbering and tag/stack id space (registries are re-seeded
+from the journal's meta sidecar), so the server folds exactly-once with
+zero ``lost_chunks``.
+
 Consumer side — :class:`IngestServer` accepts any number of producer
 connections, performs the HELLO/WELCOME handshake (allocating the host
-index and the clock offset: declared by the producer, or measured as
-``t_server − t_client``), remaps host-local tag/stack ids into the
-fleet-wide registries via the incremental TAGS/STACKS sync frames, and
-pushes normalized chunks into its :class:`~repro.fleet.aggregate.FleetSource`
-hub — which a :class:`~repro.core.session.ProfileSession` drains like any
-other source.  One server + one session = a fleet-wide
+index, the clock offset — declared by the producer, or measured as
+``t_server − t_client`` — and the payload compression codec), remaps
+host-local tag/stack ids into the fleet-wide registries via the
+incremental TAGS/STACKS sync frames, and pushes normalized chunks into
+its :class:`~repro.fleet.aggregate.FleetSource` hub — which a
+:class:`~repro.core.session.ProfileSession` drains like any other source.
+One server + one session = a fleet-wide
 :class:`~repro.core.detector.BottleneckReport` with host provenance.
+
+With ``fleet_dir=`` the server is durable too: every accepted chunk is
+journaled to a per-host SpillStore under that directory (host-local
+columns, pre-normalization) next to a meta sidecar carrying the host's
+identity, dedup floor, worker table, clock offset and registry entries.
+A *restarted* server re-opens a reconnecting host's journal, restores the
+dedup floor (so the WELCOME ``ack_seq`` survives the restart) and
+backfills the merge with the journaled history; offline,
+:meth:`~repro.fleet.aggregate.FleetSource.from_fleet_dir` replays the
+whole directory bit-equal to the live merge.
 """
 from __future__ import annotations
 
+import hashlib
+import os
+import re
 import socket
 import threading
 import time
@@ -34,19 +59,18 @@ from collections import deque
 import numpy as np
 
 from repro.core.exporters import register_exporter
+from repro.core.spill import SpillStore
 from repro.fleet import wire
-from repro.fleet.aggregate import FleetSource, HostStream
+from repro.fleet.aggregate import (FleetSource, HostStream, load_json,
+                                   restore_host_maps, write_json_atomic)
+from repro.fleet.aggregate import _grow_idmap as _grow_map
 
 
-def _grow_map(arr: np.ndarray | None, idx: int) -> np.ndarray:
-    """Ensure ``arr[idx]`` exists (new cells are identity-mapped)."""
-    if arr is None:
-        arr = np.arange(0, dtype=np.int32)
-    if idx >= arr.shape[0]:
-        new = np.arange(max(idx + 1, 2 * arr.shape[0] + 1), dtype=np.int32)
-        new[:arr.shape[0]] = arr
-        arr = new
-    return arr
+def _set_entry(lst: list, idx: int, val) -> None:
+    """Sparse list assignment (registry entries keyed by host-local id)."""
+    while len(lst) <= idx:
+        lst.append(None)
+    lst[idx] = val
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +87,21 @@ class RemoteSink:
     handshake — capture clocks (``perf_counter_ns``) have unrelated bases
     across machines, so declaring 0 is only correct for co-located
     producers sharing a clock (tests/benchmarks pass it explicitly).
+
+    ``journal=path`` turns on durable mode: chunks are journaled (flushed
+    to the OS — durable against a process crash; pass
+    ``journal_fsync=True`` to fsync every block and extend that to power
+    loss, at a per-chunk fsync cost) before they are queued, reconnects
+    replay the server-unacked tail (WELCOME ``ack_seq``), and a sink
+    re-opened on the same journal resumes the capture — instance nonce,
+    seq numbering and the tag/stack id space all persist in
+    ``path + ".meta.json"``.
+    Note: with ``drop_when_full=True`` an over-budget chunk is shed
+    *before* it is journaled — it never consumes a seq, so shedding is
+    visible only as ``dropped_chunks``, never as a server-side gap;
+    durable captures should keep the default backpressure.  ``codecs`` is the compression offer
+    for the HELLO→WELCOME negotiation (the server picks; per frame, raw
+    is the automatic fallback when deflate does not shrink the payload).
     """
 
     _CLOSE = object()
@@ -73,7 +112,9 @@ class RemoteSink:
                  clock_offset_ns: int | None = None,
                  max_buffer_chunks: int = 256, drop_when_full: bool = False,
                  reconnect_delay: float = 0.05, max_reconnects: int = 64,
-                 connect_timeout: float = 5.0):
+                 connect_timeout: float = 5.0, journal: str | None = None,
+                 journal_fsync: bool = False,
+                 codecs: tuple[str, ...] = wire.SUPPORTED_CODECS):
         self.addr = tuple(addr)
         self.host_id = str(host_id)
         self._num_workers = num_workers          # int or () -> int
@@ -86,6 +127,9 @@ class RemoteSink:
         self.reconnect_delay = float(reconnect_delay)
         self.max_reconnects = int(max_reconnects)
         self.connect_timeout = float(connect_timeout)
+        self.codecs = tuple(codecs)
+        self.codec = wire.RAW       # negotiated per connection (WELCOME)
+        self.ack_seq: int | None = None     # server floor, last WELCOME
         self._q: deque = deque()
         self._q_cap = max(int(max_buffer_chunks), 1)
         self._lock = threading.Lock()
@@ -97,19 +141,114 @@ class RemoteSink:
         self._thread: threading.Thread | None = None
         self.host_index: int | None = None
         self.epoch: int | None = None
-        self._seq = 0               # chunk sequence, NOT reset on reconnect:
+        self._next_seq = 0          # chunk sequence, NOT reset on reconnect:
         #                             the server dedups retransmits by it
         self.instance = uuid.uuid4().hex    # capture nonce (see wire HELLO)
         self._tags_sent = 0
         self._stacks_sent = 0
+        self._meta_counts = (-1, -1)
         # counters
         self.rows_sent = 0
         self.chunks_sent = 0
         self.dropped_chunks = 0
         self.reconnects = 0
         self.send_errors = 0
+        self.replayed_chunks = 0
+        self.replayed_rows = 0
+        self.wire_bytes = 0         # bytes actually written to the socket
+        self.raw_bytes = 0          # what the same frames cost uncompressed
         self.last_error: Exception | None = None
         self.failed = False
+        # durable journal: every chunk lands here (flushed) before it is
+        # queued; block index == seq, so a reconnect can replay exactly
+        # the server's unacked tail
+        self.journal_path = str(journal) if journal else None
+        self.journal_fsync = bool(journal_fsync)
+        self._journal: SpillStore | None = None
+        self._meta_path: str | None = None
+        self._journal_workers: tuple[int, list[str]] = (0, [])
+        if self.journal_path is not None:
+            self._meta_path = self.journal_path + ".meta.json"
+            self._journal = SpillStore.open_append(self.journal_path)
+            meta = load_json(self._meta_path)
+            if meta and meta.get("instance"):
+                # RESUME a previous incarnation of this capture: repeat its
+                # instance nonce (the server keeps the dedup floor — a
+                # fresh nonce would reset it and re-fold the history),
+                # continue the seq numbering after the journaled blocks,
+                # and re-seed empty registries so the new process's
+                # tag/stack ids extend the old id space instead of
+                # colliding with it
+                self.instance = str(meta["instance"])
+                self._seed_registries(meta)
+                self._journal_workers = (
+                    int(meta.get("num_workers", 0)),
+                    [str(n) for n in meta.get("worker_names") or []])
+            elif self._journal.blocks:
+                # orphaned blocks with no meta are NOT resumable: without
+                # the old nonce the server treats us as a fresh capture
+                # (ack 0), and replaying the old blocks would fold a dead
+                # capture's events into this one.  Rotate the history
+                # aside (never destroy a durable capture; the fresh nonce
+                # keeps successive orphans from clobbering each other) and
+                # start clean
+                self._journal.close()
+                os.replace(self.journal_path,
+                           f"{self.journal_path}.orphaned-{self.instance[:8]}")
+                self._journal = SpillStore(self.journal_path)
+            self._next_seq = self._journal.blocks
+            self._write_meta()
+
+    # -- durable journal helpers ---------------------------------------------
+    def _worker_table(self) -> tuple[int, list[str]]:
+        """The worker table to declare: the union of the live session's
+        workers and the journaled incarnation's (``_journal_workers``) —
+        the replayed history's worker ids must all be inside the HELLO
+        range or the server filters its rows as ``bad_rows``."""
+        nw = int(self._resolve(self._num_workers, 0))
+        names = list(self._resolve(self._worker_names,
+                                   [f"w{i}" for i in range(nw)]))
+        jnw, jnames = self._journal_workers
+        for i in range(nw, jnw):
+            names.append(jnames[i] if i < len(jnames) else f"w{i}")
+        return max(nw, jnw), names
+
+    def _seed_registries(self, meta: dict) -> None:
+        if self.tags is not None and len(self.tags.names) == 0:
+            for name, loc in meta.get("tags") or []:
+                self.tags.intern(str(name), str(loc))
+        if self.stacks is not None and len(self.stacks.paths) == 0:
+            for path in meta.get("stacks") or []:
+                self.stacks.intern(tuple(int(t) for t in path))
+
+    def _registry_counts(self) -> tuple[int, int]:
+        # locations/paths are the fully-published high-water marks (see
+        # _sync_registries)
+        t = (min(len(self.tags.names), len(self.tags.locations))
+             if self.tags is not None else 0)
+        s = len(self.stacks.paths) if self.stacks is not None else 0
+        return t, s
+
+    def _write_meta(self) -> None:
+        """Persist the resume state next to the journal: instance nonce,
+        the registry entries the journaled chunks reference, and the
+        worker table (a resumed session that registers fewer workers must
+        still HELLO the union, or the replayed history's rows for the
+        missing workers are filtered server-side as bad_rows)."""
+        if self._meta_path is None:
+            return
+        nt, ns = self._registry_counts()
+        tags = ([[self.tags.names[i], self.tags.locations[i]]
+                 for i in range(nt)] if self.tags is not None else [])
+        stacks = ([[int(t) for t in self.stacks.paths[i]]
+                   for i in range(ns)] if self.stacks is not None else [])
+        nw, names = self._worker_table()
+        write_json_atomic(self._meta_path, {
+            "host_id": self.host_id, "instance": self.instance,
+            "next_seq": self._next_seq, "tags": tags, "stacks": stacks,
+            "num_workers": nw, "worker_names": names,
+        })
+        self._meta_counts = (nt, ns)
 
     # -- store-interface intake (called under the tracer's fold lock) --------
     def append_columns(self, times, workers, deltas, tags, stacks) -> None:
@@ -121,15 +260,35 @@ class RemoteSink:
             if self._closing:
                 self.dropped_chunks += 1
                 return
+            if (self.drop_when_full and not self.failed
+                    and len(self._q) >= self._q_cap):
+                # shed BEFORE the journal: a dropped chunk must never
+                # consume a seq — the contiguous ack-replay window could
+                # not recover it, and the resulting permanent gap would
+                # read as in-flight loss server-side.  Dropped is dropped,
+                # and it is counted here
+                self.dropped_chunks += 1
+                return
+            seq = None
+            if self._journal is not None:
+                # durable first — and the meta BEFORE the block: the block
+                # may reference tags interned since the last meta write,
+                # and a crash between the two writes must not leave
+                # journaled history whose ids a resume cannot resolve
+                if self._registry_counts() != self._meta_counts:
+                    self._write_meta()
+                seq = self._journal.append_block(*item,
+                                                 sync=self.journal_fsync)
+                self._next_seq = seq + 1
             while len(self._q) >= self._q_cap and not self.failed:
-                if self.drop_when_full:
-                    self.dropped_chunks += 1
-                    return
                 self._not_full.wait(0.05)       # backpressure on the drain
             if self.failed:
                 self.dropped_chunks += 1
                 return
-            self._q.append(item)
+            if seq is None:
+                seq = self._next_seq
+                self._next_seq = seq + 1
+            self._q.append((seq, item))
             self._pending += 1
             self._not_empty.notify()
 
@@ -139,7 +298,7 @@ class RemoteSink:
     @property
     def nbytes(self) -> int:
         with self._lock:
-            return sum(sum(c.nbytes for c in item) for item in self._q
+            return sum(sum(c.nbytes for c in item[1]) for item in self._q
                        if item is not self._CLOSE)
 
     # -- lifecycle -----------------------------------------------------------
@@ -166,7 +325,7 @@ class RemoteSink:
             return not self.failed
 
     def close(self, timeout: float | None = 10.0) -> None:
-        """Flush, send BYE, stop the sender."""
+        """Flush, send BYE, stop the sender; seal the journal."""
         with self._lock:
             if self._closing:
                 pass
@@ -176,13 +335,23 @@ class RemoteSink:
                 self._not_empty.notify()
         if self._thread is not None:
             self._thread.join(timeout)
+        with self._lock:
+            if self._journal is not None:
+                self._write_meta()
+                self._journal.close()
+                self._journal = None
 
     def stats(self) -> dict:
         return {"host_id": self.host_id, "rows_sent": self.rows_sent,
                 "chunks_sent": self.chunks_sent,
                 "dropped_chunks": self.dropped_chunks,
                 "reconnects": self.reconnects,
-                "send_errors": self.send_errors, "failed": self.failed}
+                "send_errors": self.send_errors, "failed": self.failed,
+                "codec": self.codec,
+                "replayed_chunks": self.replayed_chunks,
+                "replayed_rows": self.replayed_rows,
+                "wire_bytes": self.wire_bytes, "raw_bytes": self.raw_bytes,
+                "journal": self.journal_path}
 
     # -- sender thread -------------------------------------------------------
     def _resolve(self, v, default):
@@ -195,13 +364,11 @@ class RemoteSink:
                                         timeout=self.connect_timeout)
         sock.settimeout(self.connect_timeout)
         f = sock.makefile("rwb")
-        nw = int(self._resolve(self._num_workers, 0))
-        names = list(self._resolve(self._worker_names,
-                                   [f"w{i}" for i in range(nw)]))
-        f.write(wire.encode_hello(self.host_id, nw, names,
-                                  t_client_ns=int(self.clock()),
-                                  clock_offset_ns=self.clock_offset_ns,
-                                  instance=self.instance))
+        nw, names = self._worker_table()
+        self._send(f, wire.encode_hello(
+            self.host_id, nw, names, t_client_ns=int(self.clock()),
+            clock_offset_ns=self.clock_offset_ns, instance=self.instance,
+            codecs=self.codecs))
         f.flush()
         frame = wire.read_frame(f)
         if frame is None or frame[0] != wire.WELCOME:
@@ -209,7 +376,57 @@ class RemoteSink:
         w = wire.decode_json(frame[1])
         self.host_index = int(w["host_index"])
         self.epoch = int(w["epoch"])
+        ack = w.get("ack_seq")              # absent on a v1 server
+        self.ack_seq = None if ack is None else int(ack)
+        codec = w.get("codec", wire.RAW)    # server's pick from our offer
+        self.codec = codec if codec in self.codecs else wire.RAW
+        # rewind the registry sync counters to the server's high-water
+        # marks: deltas committed against a server that then died (or
+        # restored less from its meta) must retransmit
+        ts, ss = w.get("tags_seen"), w.get("stacks_seen")
+        if ts is not None:
+            self._tags_sent = min(self._tags_sent, int(ts))
+        if ss is not None:
+            self._stacks_sent = min(self._stacks_sent, int(ss))
         return sock, f
+
+    def _send(self, f, frame: bytes) -> None:
+        f.write(frame)
+        self.wire_bytes += len(frame)
+        self.raw_bytes += wire.frame_raw_bytes(frame)
+
+    def _replay(self, f, inflight) -> None:
+        """Resend the journal blocks the server has not acked — run right
+        after every (re)connect, before any queued chunk, so the stream
+        the server folds is gapless.  [ack_seq, floor) covers exactly the
+        chunks that are neither server-acked nor still queued locally
+        (the queue and the in-flight item re-send themselves)."""
+        if self._journal is None or self.ack_seq is None:
+            return
+        with self._lock:
+            if inflight is not None and inflight is not self._CLOSE:
+                floor = inflight[0]
+            else:
+                head = next((it for it in self._q
+                             if it is not self._CLOSE), None)
+                floor = head[0] if head is not None else self._next_seq
+        if self.ack_seq >= floor:
+            return
+        tags_n, stacks_n = self._sync_registries(f)
+        seq = self.ack_seq
+        for cols in self._journal.iter_block_columns(skip=self.ack_seq):
+            if seq >= floor:
+                break
+            self._send(f, wire.encode_chunk(
+                self.host_index or 0, wire.MERGED_SHARD, self.epoch or 0,
+                seq, *cols, codec=self.codec))
+            self.replayed_chunks += 1
+            self.replayed_rows += len(cols[0])
+            seq += 1
+        f.flush()
+        # same commit rule as the live path: a flush that raised re-runs
+        # the whole replay (and the registry deltas) after reconnect
+        self._tags_sent, self._stacks_sent = tags_n, stacks_n
 
     def _sync_registries(self, f) -> tuple[int, int]:
         """Write any registry deltas; returns the (tags, stacks) high-water
@@ -222,16 +439,16 @@ class RemoteSink:
             # fully-published high-water mark
             n = min(len(self.tags.names), len(self.tags.locations))
             if n > tags_n:
-                f.write(wire.encode_tags(
+                self._send(f, wire.encode_tags(
                     [(i, self.tags.names[i], self.tags.locations[i])
-                     for i in range(tags_n, n)]))
+                     for i in range(tags_n, n)], codec=self.codec))
                 tags_n = n
         if self.stacks is not None:
             n = len(self.stacks.paths)
             if n > stacks_n:
-                f.write(wire.encode_stacks(
+                self._send(f, wire.encode_stacks(
                     [(i, self.stacks.paths[i])
-                     for i in range(stacks_n, n)]))
+                     for i in range(stacks_n, n)], codec=self.codec))
                 stacks_n = n
         return tags_n, stacks_n
 
@@ -246,11 +463,27 @@ class RemoteSink:
                     if attempts > 0:
                         time.sleep(min(self.reconnect_delay * attempts, 1.0))
                     sock, f = self._connect()
+                    # journaled sinks replay the server's unacked tail
+                    # before anything queued — seq gaps (lost in-flight
+                    # chunks, producer restarts) become recovered history.
+                    # Registry maps survive either way: a live server keeps
+                    # them in memory, a restarted fleet_dir server restores
+                    # them from the host's meta sidecar.
+                    self._replay(f, item)
+                    if (item is not None and item is not self._CLOSE
+                            and self.ack_seq is not None
+                            and item[0] < self.ack_seq):
+                        # the server read the in-flight chunk before the
+                        # connection died (our flush just never returned):
+                        # resending it would only count a duplicate
+                        self.rows_sent += len(item[1][0])
+                        self.chunks_sent += 1
+                        with self._lock:
+                            self._pending -= 1
+                            self._drained.notify_all()
+                        item = None
                     if attempts > 0:
                         self.reconnects += 1
-                        # the server keeps the per-host registry maps, but a
-                        # fresh server would not: stay incremental (same
-                        # server) — a lost server is a failed sink anyway
                     attempts = 0
                 if item is None:
                     with self._lock:
@@ -262,21 +495,22 @@ class RemoteSink:
                     if item is None:
                         continue
                 if item is self._CLOSE:
-                    f.write(wire.encode_bye(self.rows_sent, self.chunks_sent))
+                    self._send(f, wire.encode_bye(self.rows_sent,
+                                                  self.chunks_sent))
                     f.flush()
                     break
+                seq, cols = item
                 tags_n, stacks_n = self._sync_registries(f)
-                f.write(wire.encode_chunk(self.host_index or 0,
-                                          wire.MERGED_SHARD, self.epoch or 0,
-                                          self._seq, *item))
+                self._send(f, wire.encode_chunk(
+                    self.host_index or 0, wire.MERGED_SHARD, self.epoch or 0,
+                    seq, *cols, codec=self.codec))
                 f.flush()
                 # commit only after the flush: a flush() that raised is
                 # retransmitted whole after reconnect — the CHUNK with the
                 # SAME seq (server dedups), the registry deltas again
                 # (interning is idempotent server-side)
                 self._tags_sent, self._stacks_sent = tags_n, stacks_n
-                self._seq += 1
-                self.rows_sent += len(item[0])
+                self.rows_sent += len(cols[0])
                 self.chunks_sent += 1
                 with self._lock:
                     self._pending -= 1
@@ -334,6 +568,11 @@ def attach_remote(session, addr: tuple[str, int], *, host_id: str | None = None,
     ``host_id`` must be unique per logical producer (the server treats a
     repeated id as the same host reconnecting and retires its previous
     stream); the default is collision-proof.
+
+    ``journal=path`` makes the sink durable (see :class:`RemoteSink`):
+    attach it BEFORE the workload interns tags, so a resumed journal can
+    seed the session's still-empty registries, and pass a stable
+    ``host_id`` so the server folds both incarnations as one host.
     """
     tracer = session._live()
     sink = RemoteSink(
@@ -373,6 +612,14 @@ class _HostState:
         self.next_seq = 0           # dedup floor across reconnects
         self.rows_declared: int | None = None
         self.got_bye = False
+        self.codec = wire.RAW       # negotiated for the latest connection
+        # fleet_dir durability: per-host journal + resume meta
+        self.journal: SpillStore | None = None
+        self.meta_path: str | None = None
+        self.tag_entries: list = []     # host-local tag id -> [name, loc]
+        self.stack_entries: list = []   # host-local stack id -> [tag ids]
+        self.meta_sizes = (-1, -1)      # entry counts at the last write
+        self.pending_backfill = False   # journaled history awaits replay
         # serializes frame handling across overlapping connections of the
         # same host (an old handler may still drain its socket while the
         # reconnect's handler is live): epoch/seq check-and-commit and the
@@ -399,10 +646,23 @@ class IngestServer:
     def __init__(self, addr: tuple[str, int] = ("127.0.0.1", 0), *,
                  source: FleetSource | None = None, tags=None, stacks=None,
                  chunk_events: int = 1 << 16, backlog: int = 16,
-                 clock=time.time_ns):
+                 clock=time.time_ns, fleet_dir: str | None = None,
+                 fleet_fsync: bool = False,
+                 compression: str | None = wire.ZLIB):
         self.source = source if source is not None else FleetSource(
             tags=tags, stacks=stacks, chunk_events=chunk_events)
         self.clock = clock
+        # durable per-host stores: journal + meta sidecar per host under
+        # this directory; a restarted server restores dedup floors and
+        # backfills reconnecting hosts' history from them
+        self.fleet_dir = str(fleet_dir) if fleet_dir else None
+        self.fleet_fsync = bool(fleet_fsync)    # fsync per journaled chunk
+        if self.fleet_dir:
+            os.makedirs(self.fleet_dir, exist_ok=True)
+        self._journal_names: dict[str, str] = {}
+        # preferred payload codec (None => raw); the handshake can only
+        # ever select a codec the producer offered
+        self.compression = compression
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind(tuple(addr))
@@ -411,6 +671,7 @@ class IngestServer:
         self.address: tuple[str, int] = self._sock.getsockname()[:2]
         self._accept_thread: threading.Thread | None = None
         self._conn_threads: list[threading.Thread] = []
+        self._conn_socks: set[socket.socket] = set()
         self._hosts: dict[str, _HostState] = {}
         self._lock = threading.Lock()
         # leaf lock for bare counters: safe to take under st.lock (taking
@@ -428,6 +689,8 @@ class IngestServer:
         self.bad_rows = 0
         self.proto_errors = 0
         self.worker_growth_rejected = 0
+        self.backfilled_chunks = 0
+        self.backfilled_rows = 0
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "IngestServer":
@@ -460,8 +723,29 @@ class IngestServer:
             self._sock.close()
         except OSError:
             pass
+        # sever live connections: handlers block in 30s reads, so without
+        # this a close() would leave them (and their producers' "healthy"
+        # sockets) alive — producers must see the death and reconnect
+        with self._lock:
+            socks = list(self._conn_socks)
+        for c in socks:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
         for t in list(self._conn_threads):
             t.join(timeout=2.0)
+        with self._lock:
+            hosts = list(self._hosts.values())
+        for st in hosts:        # seal the durable per-host stores
+            with st.lock:
+                if st.journal is not None:
+                    st.journal.close()
+                    self._write_host_meta(st)
         self.source.notify()
 
     def finish_host(self, host_id: str) -> bool:
@@ -503,6 +787,9 @@ class IngestServer:
                 "lost_chunks": self.lost_chunks,
                 "bad_rows": self.bad_rows,
                 "proto_errors": self.proto_errors,
+                "backfilled_chunks": self.backfilled_chunks,
+                "backfilled_rows": self.backfilled_rows,
+                "fleet_dir": self.fleet_dir,
             }
         out.update(self.source.stats())
         return out
@@ -526,6 +813,7 @@ class IngestServer:
             with self._lock:
                 self.connections += 1
                 self._open_conns += 1
+                self._conn_socks.add(conn)
             t.start()
 
     def _register_host(self, hello: dict) -> _HostState:
@@ -534,6 +822,9 @@ class IngestServer:
         declared = hello.get("clock_offset_ns")
         offset = (int(declared) if declared is not None
                   else int(self.clock()) - int(hello["t_client_ns"]))
+        codec = (wire.negotiate_codec(hello.get("codecs"),
+                                      (self.compression,))
+                 if self.compression else wire.RAW)
         with self._lock:
             st = self._hosts.get(host_id)
             if st is None:
@@ -541,6 +832,8 @@ class IngestServer:
                     host_id, int(hello["num_workers"]),
                     hello.get("worker_names"), clock_offset_ns=offset)
                 st = self._hosts[host_id] = _HostState(stream, instance)
+                if self.fleet_dir:
+                    self._open_host_journal(st, instance)
             else:                       # reconnect: new clock-sync epoch
                 with st.lock:
                     st.epoch += 1
@@ -551,9 +844,17 @@ class IngestServer:
                         # producer RESTART, not a reconnect: a fresh
                         # capture numbers its chunks from 0 again — reset
                         # the dedup floor or every new chunk would drop as
-                        # a retransmit
+                        # a retransmit.  (A journal-resumed restart repeats
+                        # the old instance and lands in the branch above.)
                         st.instance = instance
                         st.next_seq = 0
+                        if st.journal is not None:
+                            # rotate the durable store: the old capture's
+                            # journal must not pollute the new capture
+                            st.journal.close()
+                            st.journal = SpillStore(st.journal.path)
+                            st.tag_entries = []
+                            st.stack_entries = []
                 # workers registered since the first HELLO: grow the host's
                 # id space when it still owns the tail of the fleet range
                 # (growth of an interior host would collide with the next
@@ -563,7 +864,103 @@ class IngestServer:
                         self.source.try_grow_host(
                             st.stream, nw, hello.get("worker_names")):
                     self.worker_growth_rejected += 1
+            with st.lock:
+                st.codec = codec
+                if st.meta_path is not None:
+                    self._write_host_meta(st)   # fresh index/offset/workers
+        if st.pending_backfill:
+            # replay the journaled history OUTSIDE the server lock (it can
+            # be a long disk read — other hosts' handshakes, stats() and
+            # close() must not stall behind it); st.lock keeps the host's
+            # own frame handlers out until the history is fully pushed, so
+            # within-host stream order is preserved
+            with st.lock:
+                if st.pending_backfill:
+                    st.pending_backfill = False
+                    self._backfill(st)
         return st
+
+    # -- fleet_dir durability ------------------------------------------------
+    def _journal_base(self, host_id: str) -> str:
+        safe = re.sub(r"[^A-Za-z0-9._-]+", "_", host_id).strip("._") or "host"
+        owner = self._journal_names.get(safe)
+        if owner is None:
+            # across a server restart the in-memory map is empty: the
+            # on-disk meta records which host_id owns this filename
+            meta = load_json(os.path.join(self.fleet_dir,
+                                           safe + ".meta.json"))
+            if meta:
+                owner = meta.get("host_id")
+        if owner is not None and owner != host_id:
+            # two distinct ids sanitize to the same filename: disambiguate
+            # (deterministic, so the same host finds its journal again)
+            safe += "-" + hashlib.sha1(host_id.encode()).hexdigest()[:8]
+        self._journal_names[safe] = host_id
+        return safe
+
+    def _open_host_journal(self, st: _HostState, instance: str) -> None:
+        """First HELLO of a host on this server: open its durable store.
+        When a meta sidecar from a previous server run matches the
+        producer's capture instance, this server RESUMED: restore the
+        dedup floor (the WELCOME ack_seq survives the restart), rebuild
+        the registry maps from the persisted entries, and backfill the
+        merge with the journaled history — the host reconnects *with*
+        history instead of starting a hole."""
+        base = self._journal_base(st.stream.host_id)
+        jpath = os.path.join(self.fleet_dir, base + ".spill")
+        st.meta_path = os.path.join(self.fleet_dir, base + ".meta.json")
+        meta = load_json(st.meta_path)
+        if (meta and instance and meta.get("instance") == instance
+                and os.path.exists(jpath)):
+            st.journal = SpillStore.open_append(jpath)
+            # block index == accepted seq (every accepted chunk journals
+            # exactly one block; accepted seq GAPS journal empty fillers),
+            # so the complete-block count IS the dedup floor — no reliance
+            # on the meta's possibly-stale next_seq
+            st.next_seq = st.journal.blocks
+            self._restore_maps(st, meta)
+            st.pending_backfill = st.journal.blocks > 0
+        else:
+            st.journal = SpillStore(jpath)      # fresh capture: truncate
+
+    def _restore_maps(self, st: _HostState, meta: dict) -> None:
+        for i, ent in enumerate(meta.get("tags") or []):
+            if ent is not None:
+                _set_entry(st.tag_entries, i, [str(ent[0]), str(ent[1])])
+        for i, path in enumerate(meta.get("stacks") or []):
+            if path is not None:
+                _set_entry(st.stack_entries, i, [int(t) for t in path])
+        restore_host_maps(st.stream, self.source.tags, self.source.stacks,
+                          st.tag_entries, st.stack_entries)
+
+    def _backfill(self, st: _HostState) -> None:
+        """Feed a resumed host's journaled history into the merge (the
+        maps are already restored, so push normalizes it exactly like the
+        live chunks it preceded)."""
+        for cols in st.journal.iter_block_columns():
+            if len(cols[0]) == 0:
+                continue
+            with self.source.cond:
+                st.stream.push(*cols)
+                self.source.cond.notify_all()
+            with self._stats_lock:
+                self.backfilled_chunks += 1
+                self.backfilled_rows += len(cols[0])
+
+    def _write_host_meta(self, st: _HostState) -> None:
+        if st.meta_path is None:
+            return
+        st.meta_sizes = (len(st.tag_entries), len(st.stack_entries))
+        s = st.stream
+        write_json_atomic(st.meta_path, {
+            "host_id": s.host_id, "instance": st.instance,
+            "host_index": s.index, "next_seq": st.next_seq,
+            "num_workers": s.num_workers, "worker_names": s.worker_names,
+            "clock_offset_ns": s.clock_offset_ns,
+            "journal": (os.path.basename(st.journal.path)
+                        if st.journal is not None else None),
+            "tags": st.tag_entries, "stacks": st.stack_entries,
+        })
 
     def _serve_conn(self, conn: socket.socket) -> None:
         conn.settimeout(30.0)
@@ -573,9 +970,20 @@ class IngestServer:
             frame = wire.read_frame(f)
             if frame is None or frame[0] != wire.HELLO:
                 raise wire.WireError("expected HELLO")
-            st = self._register_host(wire.decode_hello(frame[1]))
+            hello = wire.decode_hello(frame[1])
+            st = self._register_host(hello)
+            with st.lock:
+                ack, codec = st.next_seq, st.codec
+                tags_seen = len(st.tag_entries)
+                stacks_seen = len(st.stack_entries)
+            # reply stamped with the PEER's schema version: a v1 decoder
+            # rejects v2-stamped frames (the extra keys are harmless)
             f.write(wire.encode_welcome(st.stream.index, st.epoch,
-                                        st.stream.clock_offset_ns))
+                                        st.stream.clock_offset_ns,
+                                        ack_seq=ack, codec=codec,
+                                        tags_seen=tags_seen,
+                                        stacks_seen=stacks_seen,
+                                        version=int(hello["wire_version"])))
             f.flush()
             while True:
                 frame = wire.read_frame(f)
@@ -610,6 +1018,7 @@ class IngestServer:
                 pass
             with self._idle:
                 self._open_conns -= 1
+                self._conn_socks.discard(conn)
                 self._idle.notify_all()
             self.source.notify()
 
@@ -621,6 +1030,11 @@ class IngestServer:
                 stream.tag_map = _grow_map(stream.tag_map, int(tid))
                 stream.tag_map[int(tid)] = self.source.tags.intern(
                     str(name), str(loc))
+                _set_entry(st.tag_entries, int(tid), [str(name), str(loc)])
+            # persist only real growth (registry rewrites are full-file;
+            # a delta frame that interned nothing new must not pay one)
+            if len(st.tag_entries) != st.meta_sizes[0]:
+                self._write_host_meta(st)
 
     def _on_stacks(self, st: _HostState, obj: dict) -> None:
         stream = st.stream
@@ -633,6 +1047,10 @@ class IngestServer:
                 stream.stack_map = _grow_map(stream.stack_map, int(sid))
                 stream.stack_map[int(sid)] = self.source.stacks.intern(
                     tuple(fleet_path))
+                _set_entry(st.stack_entries, int(sid),
+                           [int(t) for t in path])
+            if len(st.stack_entries) != st.meta_sizes[1]:
+                self._write_host_meta(st)
 
     def _on_chunk(self, st: _HostState, chunk: wire.ChunkFrame) -> None:
         with st.lock:
@@ -647,15 +1065,17 @@ class IngestServer:
                 with self._stats_lock:
                     self.duplicate_chunks += 1
                 return
-            if chunk.seq > st.next_seq:
+            gap = int(chunk.seq - st.next_seq)
+            if gap:
                 # a gap means chunks committed producer-side (flush reached
                 # the kernel) never arrived — e.g. lost in a reset before
-                # the server read them.  They are unrecoverable (the sink
-                # only retains the one in-flight chunk), so count them
-                # loudly: delivery is at-most-once with loss DETECTION,
-                # not exactly-once end-to-end
+                # the server read them.  A journaling producer recovers
+                # them on its next reconnect (ack replay); otherwise count
+                # them loudly: delivery is at-most-once with loss
+                # DETECTION, not recovery (the sink only retains the one
+                # in-flight chunk)
                 with self._stats_lock:
-                    self.lost_chunks += int(chunk.seq - st.next_seq)
+                    self.lost_chunks += gap
             st.next_seq = chunk.seq + 1
             w = chunk.workers
             bad = (w < 0) | (w >= st.stream.num_workers)
@@ -666,6 +1086,19 @@ class IngestServer:
                 cols = tuple(c[keep] for c in chunk.columns)
             else:
                 cols = chunk.columns
+            if st.journal is not None:
+                # durable BEFORE the empty check: block index == seq is
+                # the resume-floor invariant, so every accepted seq must
+                # journal exactly one block (even an all-filtered one),
+                # and an accepted GAP journals empty filler blocks — a
+                # restarted server's floor (journal.blocks) then never
+                # re-accepts a seq it already folded.  Raw host-local
+                # columns — normalization replays at read time (backfill
+                # push / from_fleet_dir), like the live path.
+                empty = [np.zeros(0, dt) for dt in wire.COL_DTYPES]
+                for _ in range(gap):
+                    st.journal.append_block(*empty)
+                st.journal.append_block(*cols, sync=self.fleet_fsync)
             if len(cols[0]) == 0:
                 return
             with self.source.cond:

@@ -1,0 +1,498 @@
+"""Durable fleet ingest: producer journals + ack_seq reconnect replay,
+producer kill/restart resume, server fleet_dir persistence with
+restart backfill, and offline from_fleet_dir equality.
+
+The acceptance property throughout: after any combination of producer or
+server restarts, the final fleet report is bit-equal (numpy) to
+``detect_offline`` over the merged journals, with zero ``lost_chunks``.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import ProfileSession, detect_offline
+from repro.fleet import FleetSource, IngestServer, RemoteSink, attach_remote
+from tests.test_tracer import FakeClock
+
+
+def _ranked(rep):
+    return [(rep.path_str(p), p.cmetric, p.slices) for p in rep.paths]
+
+
+def _wait(cond, timeout=5.0):
+    deadline = time.time() + timeout
+    while not cond() and time.time() < deadline:
+        time.sleep(0.01)
+    assert cond()
+
+
+def _stream_spans(s, w, clk, n, tag="x"):
+    for _ in range(n):
+        s.begin(w, tag)
+        clk.advance(1000)
+        s.end(w)
+        clk.advance(500)
+
+
+def _assert_fleet_equals_journals(rep, fleet_dir, n_min=1.0):
+    """The live fleet report vs detect_offline on the merged durable
+    per-host stores."""
+    src = FleetSource.from_fleet_dir(fleet_dir)
+    merged = src.full_log()
+    oracle = detect_offline(merged, src.tags, src.stacks, n_min=n_min)
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert rep.total_slices == oracle.total_slices
+    assert rep.total_critical == oracle.total_critical
+    assert rep.idle_time == oracle.idle_time
+    assert rep.total_time == oracle.total_time
+    assert _ranked(rep) == _ranked(oracle)
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# acceptance: producer kill + restart mid-capture, zero lost chunks
+# ---------------------------------------------------------------------------
+
+def test_producer_restart_resumes_capture_no_loss(tmp_path):
+    """Phase 1 streams and 'dies' (graceful transport close, no process
+    state survives); phase 2 opens a FRESH session on the same journal:
+    the instance nonce, seq numbering and tag-id space all resume, so the
+    server folds both incarnations as one gapless capture."""
+    journal = str(tmp_path / "hostA.journal")
+    fleet_dir = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=fleet_dir)
+    server.start()
+    fleet_sess = ProfileSession(server.source, n_min=1.0)
+    fleet_sess.start()
+    try:
+        instances = []
+        for phase in range(2):
+            clk = FakeClock()
+            clk.t = phase * 10_000_000      # restart: clock moves forward
+            s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+            w = s.register_worker("w")
+            sink = attach_remote(s, server.address, host_id="hostA",
+                                 clock_offset_ns=0, journal=journal)
+            instances.append(sink.instance)
+            # restart seeds the tag registry from the journal meta, so
+            # phase 2's "warm"/"x" ids extend phase 1's space
+            _stream_spans(s, w, clk, 50, tag="x")
+            _stream_spans(s, w, clk, 20, tag=f"warm{phase}")
+            s.result()
+            sink.close()
+            assert not sink.failed and sink.dropped_chunks == 0
+        # the resumed sink repeated the capture nonce — that is WHY the
+        # server kept its dedup floor instead of re-folding history
+        assert instances[0] == instances[1]
+        assert server.wait_idle(10), server.stats()
+        rep = fleet_sess.result()
+        st = server.stats()
+    finally:
+        fleet_sess.stop()
+        server.close()
+
+    assert st["hosts"] == 1
+    assert st["lost_chunks"] == 0
+    assert st["duplicate_chunks"] == 0
+    assert st["rows_in"] == 280                 # (50+20)*2 rows per phase
+    assert rep.total_slices == 140
+    merged = _assert_fleet_equals_journals(rep, fleet_dir)
+    # the producer journal carries the whole capture too (both phases)
+    from repro.core import SpillStore
+    back = SpillStore.open_readonly(journal).freeze(1)
+    assert len(back) == 280
+    np.testing.assert_array_equal(np.sort(back.times), merged.times)
+    # tag names resolved across the restart (no id collisions)
+    assert {"x", "warm0", "warm1"} <= set(rep.tag_names)
+
+
+def test_server_restart_ack0_triggers_full_journal_replay(tmp_path):
+    """The server loses ALL state (no fleet_dir): its WELCOME ack_seq
+    falls back to 0 and the journaling producer replays its entire
+    history — seq gaps become recovered history, not lost_chunks."""
+    journal = str(tmp_path / "h.journal")
+    server = IngestServer()
+    server.start()
+    addr = server.address
+    clk = FakeClock()
+    s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+    w = s.register_worker("w")
+    sink = attach_remote(s, addr, host_id="h", clock_offset_ns=0,
+                         journal=journal, reconnect_delay=0.01)
+    try:
+        _stream_spans(s, w, clk, 30)
+        s.snapshot()                    # sync the shards -> sink
+        assert sink.flush(5.0)
+        _wait(lambda: server.source.stats()["rows_in"] == 60)
+        # hard server loss: every byte of ingest state vanishes
+        server.close()
+        server = IngestServer(addr)     # same port, empty state
+        server.start()
+        _stream_spans(s, w, clk, 10)
+        s.result()
+        sink.close()
+        assert not sink.failed, sink.last_error
+        assert server.wait_idle(10), server.stats()
+        st = server.stats()
+        # the new server folded the WHOLE capture: replayed history + new
+        assert st["rows_in"] == 80, st
+        assert st["lost_chunks"] == 0, st
+        assert st["duplicate_chunks"] == 0, st
+        assert sink.replayed_chunks > 0
+        rep = ProfileSession(server.source, n_min=1.0).result()
+        assert rep.total_slices == 40
+    finally:
+        server.close()
+
+
+def test_fleet_dir_server_restart_restores_floor_and_backfills(tmp_path):
+    """A fleet_dir server restart: the reconnecting host's meta+journal
+    restore the dedup floor (ack_seq survives, so nothing re-folds) and
+    the journaled history is backfilled into the fresh merge — the host
+    reconnects WITH history."""
+    fleet_dir = str(tmp_path / "fleet")
+    journal = str(tmp_path / "h.journal")
+    server = IngestServer(fleet_dir=fleet_dir)
+    server.start()
+    addr = server.address
+    clk = FakeClock()
+    s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+    w = s.register_worker("w")
+    sink = attach_remote(s, addr, host_id="h", clock_offset_ns=0,
+                         journal=journal, reconnect_delay=0.01)
+    try:
+        _stream_spans(s, w, clk, 40, tag="phase1")
+        s.snapshot()                    # sync the shards -> sink
+        assert sink.flush(5.0)
+        _wait(lambda: server.stats()["rows_in"] == 80)
+        server.close()
+
+        server = IngestServer(addr, fleet_dir=fleet_dir)
+        server.start()
+        fleet_sess = ProfileSession(server.source, n_min=1.0)
+        fleet_sess.start()
+        _stream_spans(s, w, clk, 15, tag="phase2")
+        s.result()
+        sink.close()
+        assert not sink.failed, sink.last_error
+        assert server.wait_idle(10), server.stats()
+        rep = fleet_sess.result()
+        st = server.stats()
+        # floor restored from the meta: the server deduped nothing — the
+        # phase-1 history came from the backfill, not a producer replay
+        assert st["duplicate_chunks"] == 0 and st["lost_chunks"] == 0, st
+        assert st["backfilled_rows"] == 80, st
+        assert rep.total_slices == 55
+        assert {"phase1", "phase2"} <= set(rep.tag_names)
+        _assert_fleet_equals_journals(rep, fleet_dir)
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# fleet_dir offline replay + meta contents
+# ---------------------------------------------------------------------------
+
+def test_from_fleet_dir_matches_live_two_hosts(tmp_path):
+    fleet_dir = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=fleet_dir)
+    server.start()
+    fleet_sess = ProfileSession(server.source, n_min=2.0)
+    fleet_sess.start()
+    try:
+        prods = []
+        for hi in range(2):
+            clk = FakeClock()
+            clk.t = hi * 137
+            s = ProfileSession(n_min=2.0, clock=clk, drain_interval=0.001)
+            wids = [s.register_worker(f"t{i}") for i in range(2)]
+            sink = attach_remote(s, server.address, host_id=f"host{hi}",
+                                 clock_offset_ns=0)
+            prods.append((s, wids, clk, sink))
+            _wait(lambda: server.stats()["hosts"] == hi + 1)
+        for (s, wids, clk, sink) in prods:
+            with s.running():
+                for _ in range(100):
+                    s.begin(wids[0], "step")
+                    clk.advance(1000)
+                    s.begin(wids[1], "io")
+                    clk.advance(1000)
+                    s.end(wids[1])
+                    clk.advance(700)
+                    s.end(wids[0])
+                    clk.advance(300)
+            s.result()
+            sink.close()
+        assert server.wait_idle(10), server.stats()
+        rep = fleet_sess.result()
+    finally:
+        fleet_sess.stop()
+        server.close()
+
+    merged = _assert_fleet_equals_journals(rep, fleet_dir, n_min=2.0)
+    assert len(merged) == 800
+    # provenance survives the offline replay
+    src = FleetSource.from_fleet_dir(fleet_dir)
+    assert [h.host_id for h in src.hosts] == ["host0", "host1"]
+    assert src.worker_hosts() == ["host0"] * 2 + ["host1"] * 2
+    rep2 = ProfileSession(src, n_min=2.0).result()
+    assert rep2.worker_hosts == rep.worker_hosts
+    assert _ranked(rep2) == _ranked(rep)
+
+    # meta sidecars carry the resume state the replay just used
+    metas = sorted(f for f in os.listdir(fleet_dir)
+                   if f.endswith(".meta.json"))
+    assert len(metas) == 2
+    with open(os.path.join(fleet_dir, metas[0])) as f:
+        meta = json.load(f)
+    assert meta["host_id"] in ("host0", "host1")
+    assert meta["num_workers"] == 2
+    assert meta["next_seq"] >= 1
+    assert any(t and t[0] in ("step", "io") for t in meta["tags"])
+
+
+def test_from_fleet_dir_missing_journal_raises(tmp_path):
+    """A meta whose journal file is gone must fail loudly — a silent skip
+    would drop the whole host from the offline replay unnoticed."""
+    fleet_dir = tmp_path / "fleet"
+    fleet_dir.mkdir()
+    with open(fleet_dir / "h.meta.json", "w") as f:
+        json.dump({"host_id": "h", "host_index": 0, "num_workers": 1,
+                   "journal": "h.spill", "instance": "i"}, f)
+    import pytest
+    with pytest.raises(FileNotFoundError):
+        FleetSource.from_fleet_dir(str(fleet_dir))
+
+
+def test_journal_meta_seeds_only_empty_registries(tmp_path):
+    """Resume seeding must not scramble a session that already interned
+    tags: non-empty registries are left alone."""
+    journal = str(tmp_path / "j.journal")
+    sink = RemoteSink(("127.0.0.1", 1), "h", journal=journal,
+                      max_reconnects=0, connect_timeout=0.05)
+    # fabricate a meta as a previous incarnation would have left it
+    sink.close(timeout=0.1)
+    with open(journal + ".meta.json") as f:
+        meta = json.load(f)
+    meta["tags"] = [["old_tag", "m:1"]]
+    meta["instance"] = "prev-instance"
+    with open(journal + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+    from repro.core.tracer import StackRegistry, TagRegistry
+    empty = TagRegistry()
+    s2 = RemoteSink(("127.0.0.1", 1), "h", journal=journal, tags=empty,
+                    stacks=StackRegistry(), max_reconnects=0,
+                    connect_timeout=0.05)
+    assert s2.instance == "prev-instance"
+    assert list(empty.names) == ["old_tag"]
+    s2.close(timeout=0.1)
+
+    busy = TagRegistry()
+    busy.intern("mine", "m:0")
+    s3 = RemoteSink(("127.0.0.1", 1), "h", journal=journal, tags=busy,
+                    stacks=StackRegistry(), max_reconnects=0,
+                    connect_timeout=0.05)
+    assert list(busy.names) == ["mine"]     # untouched
+    s3.close(timeout=0.1)
+
+
+def test_resume_with_fewer_workers_keeps_history(tmp_path):
+    """A resumed incarnation that registers fewer workers than the dead
+    one must still HELLO the union worker table (persisted in the meta),
+    or the replayed history's rows for the missing workers would be
+    silently filtered as bad_rows."""
+    journal = str(tmp_path / "w.journal")
+    server = IngestServer()
+    server.start()
+    try:
+        # phase 1: two workers, rows on both
+        clk = FakeClock()
+        s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+        w0 = s.register_worker("a")
+        w1 = s.register_worker("b")
+        sink = attach_remote(s, server.address, host_id="h",
+                             clock_offset_ns=0, journal=journal)
+        _stream_spans(s, w0, clk, 10)
+        _stream_spans(s, w1, clk, 10)
+        s.result()
+        sink.close()
+        server.close()
+
+        # server loses everything; phase 2 registers only ONE worker
+        server2 = IngestServer(server.address)
+        server2.start()
+        clk2 = FakeClock()
+        clk2.t = 10_000_000
+        s2 = ProfileSession(n_min=1.0, clock=clk2, drain_interval=0.001)
+        v0 = s2.register_worker("a")
+        sink2 = attach_remote(s2, server2.address, host_id="h",
+                              clock_offset_ns=0, journal=journal)
+        _stream_spans(s2, v0, clk2, 5)
+        s2.result()
+        sink2.close()
+        assert server2.wait_idle(10), server2.stats()
+        st = server2.stats()
+        # the full replay (ack 0) landed: worker b's rows included
+        assert st["bad_rows"] == 0, st
+        assert st["rows_in"] == 50, st
+        assert server2.source.hosts[0].num_workers == 2
+        assert server2.source.hosts[0].worker_names == ["a", "b"]
+        server = server2
+    finally:
+        server.close()
+
+
+def test_orphaned_journal_without_meta_starts_clean(tmp_path):
+    """Journal blocks with no meta sidecar are a dead capture (no nonce
+    to resume): the sink must truncate instead of replaying them into the
+    new capture."""
+    journal = str(tmp_path / "o.journal")
+    z = [np.asarray(a) for a in
+         ([10, 20], np.zeros(2, np.int32), [1, -1],
+          np.full(2, -1, np.int32), np.full(2, -1, np.int32))]
+    sink = RemoteSink(("127.0.0.1", 1), "h", journal=journal,
+                      max_reconnects=0, connect_timeout=0.05)
+    sink.append_columns(*z)
+    sink.close(timeout=0.2)
+    assert os.path.getsize(journal) > 0
+    os.remove(journal + ".meta.json")
+    s2 = RemoteSink(("127.0.0.1", 1), "h", journal=journal,
+                    max_reconnects=0, connect_timeout=0.05)
+    assert s2._next_seq == 0
+    from repro.core import SpillStore
+    assert SpillStore.open_readonly(journal).blocks == 0
+    # the dead capture's history is rotated aside, never destroyed
+    orphans = [p for p in os.listdir(tmp_path) if ".orphaned" in p]
+    assert len(orphans) == 1
+    assert SpillStore.open_readonly(str(tmp_path / orphans[0])).blocks == 1
+    s2.close(timeout=0.2)
+
+
+def test_accepted_seq_gap_journals_filler_blocks(tmp_path):
+    """An accepted gap (lost chunks the server moves past) must keep the
+    fleet_dir journal's block-index == seq invariant via empty filler
+    blocks — otherwise a restarted server's ack floor would re-accept
+    already-folded seqs."""
+    import socket as socket_mod
+    from repro.fleet import wire
+    fleet_dir = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=fleet_dir)
+    server.start()
+    addr = server.address
+    cols = (np.asarray([10, 20], np.int64), np.zeros(2, np.int32),
+            np.asarray([1, -1], np.int8), np.full(2, -1, np.int32),
+            np.full(2, -1, np.int32))
+    try:
+        sock = socket_mod.create_connection(addr, timeout=5)
+        f = sock.makefile("rwb")
+        f.write(wire.encode_hello("gappy", 1, ["w0"], t_client_ns=0,
+                                  clock_offset_ns=0, instance="inst-1"))
+        f.flush()
+        kind, payload = wire.read_frame(f)
+        epoch = wire.decode_json(payload)["epoch"]
+        f.write(wire.encode_chunk(0, wire.MERGED_SHARD, epoch, 0, *cols))
+        # seqs 1 and 2 never sent: an accepted gap
+        c2 = tuple(np.asarray([30, 40], np.int64) if i == 0 else c
+                   for i, c in enumerate(cols))
+        f.write(wire.encode_chunk(0, wire.MERGED_SHARD, epoch, 3, *c2))
+        f.write(wire.encode_bye(rows_sent=4, chunks_sent=2))
+        f.flush()
+        _wait(lambda: server.stats()["lost_chunks"] == 2)
+        f.close()
+        sock.close()
+        server.wait_idle(10)
+        server.close()
+
+        # restart: the floor must be 4 (past the gap), not 2
+        server = IngestServer(addr, fleet_dir=fleet_dir)
+        server.start()
+        sock = socket_mod.create_connection(addr, timeout=5)
+        f = sock.makefile("rwb")
+        f.write(wire.encode_hello("gappy", 1, ["w0"], t_client_ns=0,
+                                  clock_offset_ns=0, instance="inst-1"))
+        f.flush()
+        kind, payload = wire.read_frame(f)
+        w = wire.decode_json(payload)
+        assert w["ack_seq"] == 4, w
+        # the backfill re-fed only the 4 real rows, fillers skipped
+        assert server.stats()["backfilled_rows"] == 4
+        f.close()
+        sock.close()
+    finally:
+        server.close()
+
+
+def test_v1_producer_handshake_gets_v1_welcome(tmp_path):
+    """A v1 producer (old build) must be able to complete the handshake:
+    the server stamps its WELCOME with the peer's schema version."""
+    import socket as socket_mod
+    import struct as struct_mod
+    from repro.fleet import wire
+    server = IngestServer()
+    server.start()
+    try:
+        sock = socket_mod.create_connection(server.address, timeout=5)
+        f = sock.makefile("rwb")
+        hello = {"magic": wire.MAGIC, "wire_version": 1, "host_id": "old",
+                 "num_workers": 1, "worker_names": ["w0"],
+                 "t_client_ns": 0, "clock_offset_ns": 0}
+        payload = json.dumps(hello).encode()
+        f.write(struct_mod.pack("<BBHI", wire.HELLO, 0, 1, len(payload))
+                + payload)
+        f.flush()
+        hdr = f.read(8)
+        kind, flags, version, length = struct_mod.unpack("<BBHI", hdr)
+        assert kind == wire.WELCOME
+        assert version == 1                 # a v1 decoder accepts this
+        assert flags == 0                   # and it is never compressed
+        w = json.loads(f.read(length))
+        assert w["codec"] == "raw"          # no codecs offered -> raw
+        f.close()
+        sock.close()
+    finally:
+        server.close()
+
+
+def test_truncated_journal_replay_floor_survives(tmp_path):
+    """Torn tail in the producer journal (crash mid-append): the resumed
+    sink's seq floor excludes the torn block, and the server receives a
+    gapless, bit-exact stream of the surviving blocks."""
+    journal = str(tmp_path / "t.journal")
+    z = [np.asarray(a) for a in
+         ([10, 20], np.zeros(2, np.int32), [1, -1],
+          np.full(2, -1, np.int32), np.full(2, -1, np.int32))]
+    sink = RemoteSink(("127.0.0.1", 1), "h", journal=journal,
+                      max_reconnects=0, connect_timeout=0.05)
+    for k in range(4):
+        cols = [np.asarray([10 + 100 * k, 20 + 100 * k], np.int64)] + z[1:]
+        sink.append_columns(*cols)
+    assert sink._next_seq == 4
+    sink.close(timeout=0.2)
+    # rip into the last block's payload
+    size = os.path.getsize(journal)
+    with open(journal, "r+b") as f:
+        f.truncate(size - 7)
+
+    server = IngestServer()
+    server.start()
+    try:
+        s2 = RemoteSink(server.address, "h", num_workers=1,
+                        worker_names=["w0"], clock_offset_ns=0,
+                        journal=journal)
+        assert s2._next_seq == 3            # floor excludes the torn block
+        s2.start()                          # connect: ack 0 -> replay all 3
+        assert s2.flush(5.0)
+        _wait(lambda: server.source.stats()["rows_in"] == 6)
+        # the re-recorded 4th chunk continues the numbering gaplessly
+        cols = [np.asarray([1000, 1100], np.int64)] + z[1:]
+        s2.append_columns(*cols)
+        s2.close()
+        assert server.wait_idle(10), server.stats()
+        st = server.stats()
+        assert st["rows_in"] == 8
+        assert st["lost_chunks"] == 0 and st["duplicate_chunks"] == 0, st
+    finally:
+        server.close()

@@ -65,11 +65,16 @@ def test_hello_welcome_roundtrip():
     h = wire.decode_hello(payload)
     assert h["host_id"] == "hostA" and h["num_workers"] == 4
     assert h["clock_offset_ns"] is None and h["t_client_ns"] == 123
+    assert h["codecs"] == list(wire.SUPPORTED_CODECS)
 
-    kind, payload = _roundtrip(wire.encode_welcome(2, 1, -50))
+    kind, payload = _roundtrip(wire.encode_welcome(2, 1, -50, ack_seq=7,
+                                                   codec=wire.ZLIB,
+                                                   tags_seen=3))
     assert kind == wire.WELCOME
     w = wire.decode_json(payload)
-    assert w == {"host_index": 2, "epoch": 1, "clock_offset_ns": -50}
+    assert w == {"host_index": 2, "epoch": 1, "clock_offset_ns": -50,
+                 "ack_seq": 7, "codec": "zlib", "tags_seen": 3,
+                 "stacks_seen": 0}
 
 
 def test_registry_sync_roundtrip():
@@ -117,3 +122,122 @@ def test_multiple_frames_stream():
     assert wire.read_frame(buf) is None
     assert (wire.decode_json(p1)["rows_sent"],
             wire.decode_json(p2)["rows_sent"]) == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# compression codec (v2): negotiated zlib frames, flag bit, inflate guard
+# ---------------------------------------------------------------------------
+
+def _synthetic_cols(n=512, seed=1):
+    rng = np.random.default_rng(seed)
+    return (np.sort(rng.integers(0, 10**9, n)).astype(np.int64),
+            rng.integers(0, 8, n).astype(np.int32),
+            rng.choice([-1, 1], n).astype(np.int8),
+            rng.integers(-1, 4, n).astype(np.int32),
+            rng.integers(-1, 3, n).astype(np.int32))
+
+
+def test_compressed_chunk_roundtrip_bit_exact():
+    cols = _synthetic_cols()
+    raw = wire.encode_chunk(1, wire.MERGED_SHARD, 2, 3, *cols)
+    comp = wire.encode_chunk(1, wire.MERGED_SHARD, 2, 3, *cols,
+                             codec=wire.ZLIB)
+    assert len(comp) < len(raw)                 # it actually compressed
+    assert comp[1] & wire.FLAG_COMPRESSED       # flag bit in the header
+    assert wire.frame_raw_bytes(comp) == len(raw)
+    kind, payload = _roundtrip(comp)
+    assert kind == wire.CHUNK
+    c = wire.decode_chunk(payload)
+    assert (c.host_index, c.epoch, c.seq) == (1, 2, 3)
+    for got, want in zip(c.columns, cols):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def test_compressed_roundtrip_all_json_kinds():
+    """Every control-plane frame kind round-trips identically under zlib
+    (padded so the payloads clear the compress-min threshold)."""
+    pad = "x" * 200
+    frames = [
+        (wire.HELLO, wire.encode_hello("h" + pad, 2, ["a", "b"],
+                                       t_client_ns=1, clock_offset_ns=0)),
+        (wire.TAGS, wire.encode_tags([(i, f"tag{i}{pad}", "m:1")
+                                      for i in range(8)], codec=wire.ZLIB)),
+        (wire.STACKS, wire.encode_stacks([(i, (0, 1, 2))
+                                          for i in range(30)],
+                                         codec=wire.ZLIB)),
+    ]
+    for kind, raw in frames:
+        k, payload = _roundtrip(raw)
+        assert k == kind
+        wire.decode_json(payload)               # valid JSON after inflate
+    assert frames[1][1][1] & wire.FLAG_COMPRESSED
+
+
+def test_incompressible_payload_falls_back_to_raw():
+    """Per-frame fallback: when deflate does not shrink the payload the
+    flag stays clear and the bytes ship raw."""
+    import os as _os
+    noise = _os.urandom(4096)
+    f = wire.pack_frame(wire.BYE, noise, codec=wire.ZLIB)
+    assert not (f[1] & wire.FLAG_COMPRESSED)
+    assert _roundtrip(f) == (wire.BYE, noise)
+    # tiny payloads never bother compressing either
+    tiny = wire.pack_frame(wire.BYE, b"{}", codec=wire.ZLIB)
+    assert not (tiny[1] & wire.FLAG_COMPRESSED)
+
+
+def test_inflate_guard_rejects_bad_lengths_and_garbage():
+    import zlib as _zlib
+    good = _zlib.compress(b"a" * 1000)
+    # declared length lies small -> reject (stream longer than declared)
+    bad = struct.pack("<I", 10) + good
+    hdr = struct.pack("<BBHI", wire.BYE, wire.FLAG_COMPRESSED,
+                      wire.WIRE_VERSION, len(bad))
+    with pytest.raises(wire.WireError):
+        _roundtrip(hdr + bad)
+    # declared length exceeds MAX_PAYLOAD -> rejected BEFORE inflating
+    bomb = struct.pack("<I", wire.MAX_PAYLOAD + 1) + good
+    hdr = struct.pack("<BBHI", wire.BYE, wire.FLAG_COMPRESSED,
+                      wire.WIRE_VERSION, len(bomb))
+    with pytest.raises(wire.WireError):
+        _roundtrip(hdr + bomb)
+    # declared length of ZERO means UNLIMITED to zlib's max_length — it
+    # must be rejected outright or a bomb inflates before the size check
+    zero = struct.pack("<I", 0) + good
+    hdr = struct.pack("<BBHI", wire.BYE, wire.FLAG_COMPRESSED,
+                      wire.WIRE_VERSION, len(zero))
+    with pytest.raises(wire.WireError):
+        _roundtrip(hdr + zero)
+    # not a zlib stream at all
+    junk = struct.pack("<I", 100) + b"not-zlib-data"
+    hdr = struct.pack("<BBHI", wire.BYE, wire.FLAG_COMPRESSED,
+                      wire.WIRE_VERSION, len(junk))
+    with pytest.raises(wire.WireError):
+        _roundtrip(hdr + junk)
+    # unknown flag bits are still rejected
+    hdr = struct.pack("<BBHI", wire.BYE, 0x80, wire.WIRE_VERSION, 0)
+    with pytest.raises(wire.WireError):
+        _roundtrip(hdr)
+
+
+def test_v1_frames_still_accepted():
+    """Additive bump: a v1 peer's frames (flags 0, version 1) decode."""
+    payload = b'{"rows_sent":1,"chunks_sent":1}'
+    v1 = struct.pack("<BBHI", wire.BYE, 0, 1, len(payload)) + payload
+    assert _roundtrip(v1) == (wire.BYE, payload)
+    # ... but a FUTURE version is rejected
+    v3 = struct.pack("<BBHI", wire.BYE, 0, wire.WIRE_VERSION + 1,
+                     len(payload)) + payload
+    with pytest.raises(wire.WireError):
+        _roundtrip(v3)
+
+
+def test_negotiate_codec():
+    assert wire.negotiate_codec(["zlib", "raw"]) == "zlib"
+    assert wire.negotiate_codec(["raw"]) == "raw"
+    assert wire.negotiate_codec(None) == "raw"          # v1 HELLO
+    assert wire.negotiate_codec([]) == "raw"
+    assert wire.negotiate_codec(["br", "zstd"]) == "raw"  # no overlap
+    assert wire.negotiate_codec(["zlib"], preferred=("raw",)) == "raw"
+    assert wire.negotiate_codec(["zlib"], preferred=(None,)) == "raw"

@@ -123,3 +123,73 @@ def test_readonly_store_rejects_appends(tmp_path):
     with pytest.raises(ValueError):
         ro.append_columns(log.times, log.workers, log.deltas, log.tags,
                           log.stacks)
+
+
+# ---------------------------------------------------------------------------
+# journal mode: open_append + append_block (block index == seq)
+# ---------------------------------------------------------------------------
+
+def _block(log, lo, hi):
+    c = log.chunk(lo, hi)
+    return (c.times, c.workers, c.deltas, c.tags, c.stacks)
+
+
+def test_append_block_indexes_and_replay(tmp_path):
+    """One append_block == one block, in order: the journal invariant the
+    fleet replay builds its seq numbering on."""
+    log = synthetic_log(np.random.default_rng(6), 2, 64)   # 256 rows
+    path = str(tmp_path / "j.spill")
+    j = SpillStore.open_append(path)
+    sizes = (10, 1, 37, 100)
+    lo = 0
+    for i, n in enumerate(sizes):
+        assert j.append_block(*_block(log, lo, lo + n)) == i
+        lo += n
+    assert j.blocks == len(sizes)
+    # replay skipping a prefix yields exactly the tail blocks, same shapes
+    tail = list(j.iter_block_columns(skip=2))
+    assert [len(c[0]) for c in tail] == [37, 100]
+    np.testing.assert_array_equal(tail[0][0], log.times[11:48])
+    j.close()
+
+
+def test_open_append_resumes_after_complete_history(tmp_path):
+    log = synthetic_log(np.random.default_rng(7), 2, 48)
+    path = str(tmp_path / "r.spill")
+    j = SpillStore.open_append(path)
+    j.append_block(*_block(log, 0, 50))
+    j.append_block(*_block(log, 50, 120))
+    j.close()
+    # a fresh open (producer restart) resumes the block numbering
+    j2 = SpillStore.open_append(path)
+    assert j2.blocks == 2
+    assert j2.append_block(*_block(log, 120, 192)) == 2
+    back = j2.freeze(log.num_workers)
+    np.testing.assert_array_equal(back.times, log.times)
+    j2.close()
+
+
+def test_open_append_truncates_torn_tail_to_resume_floor(tmp_path):
+    """A crash mid-append leaves a torn tail block; reopening the journal
+    must cut it back to the last complete block so (a) the resume floor
+    (block count) is exact and (b) the next append starts at a clean frame
+    instead of corrupting the stream."""
+    log = synthetic_log(np.random.default_rng(8), 2, 64)   # 256 rows
+    path = str(tmp_path / "torn.spill")
+    j = SpillStore.open_append(path)
+    for lo in range(0, 256, 64):
+        j.append_block(*_block(log, lo, lo + 64))
+    j.close()
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 33)              # rip into the last payload
+    j2 = SpillStore.open_append(path)
+    assert j2.blocks == 3                  # torn tail excluded from floor
+    assert os.path.getsize(path) < size    # ...and physically removed
+    # re-append the recovered block: the file is whole again
+    assert j2.append_block(*_block(log, 192, 256)) == 3
+    back = j2.freeze(log.num_workers)
+    np.testing.assert_array_equal(back.times, log.times)
+    # a replay skipping the acked prefix sees the re-appended tail
+    assert [len(c[0]) for c in j2.iter_block_columns(skip=3)] == [64]
+    j2.close()
