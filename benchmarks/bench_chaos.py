@@ -1,0 +1,294 @@
+"""Chaos gate: 64 producers under a scripted FaultPlan, recovery exact.
+
+The stress half of the fleet story.  N journaled producers stream
+deterministic captures into a journaled (``fleet_dir``) IngestServer
+while a seeded :class:`repro.fleet.faults.FaultPlan` injects the whole
+failure-modes matrix live:
+
+* **producer kills** — ``RemoteSink.abort()`` mid-capture (no BYE, no
+  flush, queue discarded like a SIGKILL), then a fresh session+sink on
+  the same journal resumes the capture instance;
+* **server kill/restarts** — the ingest server is closed and reopened on
+  the same port + ``fleet_dir`` at scheduled points while every producer
+  is mid-stream (reconnect storm, floor restore, history backfill);
+* **partitions** — scripted connection drops followed by refused
+  redials (bounded outage, full-jitter backoff);
+* **slow hosts** — per-frame latency injection on a subset.
+
+Gates (raise on violation — this smoke FAILS the job, it does not warn):
+
+1. **Recovery equality**: ``FleetSource.from_fleet_dir`` (what the
+   server durably accepted) is bit-equal — merged rows AND the
+   detect_offline report (numpy backend) — to
+   ``FleetSource.from_producer_journals`` over the union of every
+   producer's journal (ground truth: everything ever captured).
+2. **Exact reconciliation**: per host, server-journaled chunks ==
+   producer-journaled chunks; ``lost_chunks == 0`` summed over every
+   server incarnation; on the final incarnation
+   ``rows_in == rows_folded + shed_rows`` — accepted rows are folded or
+   shed, never silently dropped (shed rows remain recoverable offline,
+   which gate 1 just proved).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import ProfileSession, SpillStore, detect_offline
+from repro.fleet import FaultPlan, FleetSource, IngestServer, attach_remote
+from repro.fleet.aggregate import load_json
+
+
+class _StepClock:
+    """Deterministic per-producer capture clock (ns)."""
+
+    def __init__(self, base: int):
+        self.t = base
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance(self, ns: int) -> None:
+        self.t += ns
+
+
+def _ranked(rep):
+    return [(rep.path_str(p), p.cmetric, p.slices) for p in rep.paths]
+
+
+def _producer(addr, host_id, seed, journal, plan, rounds, spans,
+              kill_rounds, progress, errors):
+    """One producer: `rounds` snapshot-bounded chunks, restarting itself
+    from the journal after each scripted kill."""
+    clk = _StepClock(0)
+    sess = sink = None
+    wid = None
+
+    def boot():
+        nonlocal sess, sink, wid
+        sess = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+        wid = sess.register_worker("w0")
+        sink = attach_remote(sess, addr, host_id=host_id, clock_offset_ns=0,
+                             journal=journal, fault_plan=plan,
+                             reconnect_delay=0.01, backoff_max=0.1,
+                             backoff_seed=seed,
+                             max_reconnects=1 << 30,
+                             heartbeat_interval=None)
+
+    try:
+        boot()
+        for r in range(rounds):
+            if r in kill_rounds:
+                # SIGKILL semantics: sever mid-stream, lose the process,
+                # keep only the journal — then resume the capture from it
+                sink.abort()
+                sess.close()
+                boot()
+            for _ in range(spans):
+                sess.begin(wid, "work")
+                clk.advance(1000)
+                sess.end(wid)
+                clk.advance(500)
+            sess.snapshot()             # one deterministic chunk per round
+            with progress["lock"]:
+                progress["steps"] += 1
+            # pace production in real time: the capture clock is synthetic
+            # and a round is microseconds of CPU, so without this every
+            # producer finishes all its rounds before the first scheduled
+            # fault lands — the chaos must hit captures MID-delivery
+            time.sleep(0.004)
+        sess.result()
+        sink.close(timeout=30.0)
+        st = sink.stats()
+        if sink.failed or st["pending"]:
+            errors.append((host_id, f"undelivered: {st}"))
+    except Exception as e:              # surfaced by the driver's gate
+        errors.append((host_id, repr(e)))
+
+
+def run_chaos(producers: int = 64, rounds: int = 8, spans: int = 4,
+              seed: int = 20260808, kills: int = 8, partitions: int = 4,
+              server_restarts: int = 4, slow_hosts: int = 2,
+              max_pending_rows: int = 48,
+              rotate_bytes: int | None = None) -> dict:
+    plan = FaultPlan(seed)
+    rng = plan.rng
+    hosts = [f"chaos{i:03d}" for i in range(producers)]
+    journals: dict[str, str] = {}
+
+    # scripted producer kills: which host, at which round (mid-capture)
+    kill_at: dict[str, set] = {h: set() for h in hosts}
+    for h in rng.sample(hosts, kills):
+        kill_at[h].add(rng.randrange(2, max(rounds - 1, 3)))
+    # partitions: drop an established connection, then refuse the redials
+    for h in rng.sample(hosts, partitions):
+        plan.drop(h, frame=rng.randrange(3, 3 + rounds))
+        plan.refuse_connect(h, times=rng.randrange(1, 3))
+    # persistently slow producers
+    for h in rng.sample(hosts, slow_hosts):
+        plan.slow(h, per_frame=0.005)
+    # server kill/restart schedule over global round progress
+    total_steps = producers * rounds
+    plan.schedule("server_restart",
+                  sorted(rng.sample(range(total_steps // 8,
+                                          total_steps - total_steps // 8),
+                                    server_restarts)))
+
+    work_dir = tempfile.mkdtemp(prefix="gapp-chaos-")
+    fleet_dir = f"{work_dir}/fleet"
+
+    def new_server(addr=("127.0.0.1", 0)):
+        s = IngestServer(addr, fleet_dir=fleet_dir,
+                         fleet_rotate_bytes=rotate_bytes,
+                         max_pending_rows=max_pending_rows,
+                         read_deadline=30.0, idle_release=30.0)
+        s.start()
+        return s
+
+    server = new_server()
+    addr = server.address
+    progress = {"lock": threading.Lock(), "steps": 0}
+    errors: list = []
+    cum = {"lost_chunks": 0, "duplicate_chunks": 0, "shed_chunks": 0,
+           "shed_rows": 0, "proto_errors": 0, "deadline_closed": 0,
+           "journal_errors": 0}
+    restarts_done = 0
+
+    def fold_stats(st):
+        for k in cum:
+            cum[k] += st.get(k, 0)
+
+    threads = []
+    t0 = time.perf_counter()
+    try:
+        for i, h in enumerate(hosts):
+            journals[h] = f"{work_dir}/{h}.journal"
+            t = threading.Thread(target=_producer,
+                                 args=(addr, h, seed ^ i, journals[h], plan,
+                                       rounds, spans, kill_at[h], progress,
+                                       errors),
+                                 name=f"chaos-{h}")
+            t.start()
+            threads.append(t)
+        # the chaos driver: watch global progress, kill/restart the
+        # server at the scheduled steps.  The wall gap keeps restarts
+        # from collapsing into one burst when production outpaces the
+        # schedule — each incarnation must live long enough to accept
+        # real traffic before it is killed
+        last_restart = time.monotonic()
+        while any(t.is_alive() for t in threads):
+            with progress["lock"]:
+                step = progress["steps"]
+            if (time.monotonic() - last_restart >= 0.08
+                    and plan.due("server_restart", step)):
+                fold_stats(server.stats())
+                server.close()          # hard server loss mid-fleet
+                server = new_server(addr)
+                restarts_done += 1
+                last_restart = time.monotonic()
+            time.sleep(0.005)
+        for t in threads:
+            t.join()
+        assert not errors, f"producer failures: {errors[:5]}"
+        assert server.wait_idle(60.0), server.stats()
+        wall_s = time.perf_counter() - t0
+
+        # final fold: drain whatever the last incarnation holds (live
+        # pushes + backfilled history) — shed rows degrade THIS report
+        # only, never the journals
+        t1 = time.perf_counter()
+        fleet_sess = ProfileSession(server.source, n_min=1.0)
+        live_rep = fleet_sess.result()
+        fold_ms = (time.perf_counter() - t1) * 1e3
+        folded = fleet_sess.stats()["events_folded"]
+        final_stats = server.stats()
+        fold_stats(final_stats)
+    finally:
+        try:
+            server.close()
+        except Exception:
+            pass
+
+    # ---- gate 1: recovered server state == producer-journal union ----
+    fleet_src = FleetSource.from_fleet_dir(fleet_dir)
+    host_order = [h.host_id for h in fleet_src.hosts]
+    assert sorted(host_order) == sorted(hosts), (host_order, len(hosts))
+    prod_src = FleetSource.from_producer_journals(
+        [journals[h] for h in host_order])
+    flog, plog = fleet_src.full_log(), prod_src.full_log()
+    expected_rows = producers * rounds * spans * 2
+    assert len(plog) == expected_rows, (len(plog), expected_rows)
+    np.testing.assert_array_equal(flog.times, plog.times)
+    np.testing.assert_array_equal(flog.workers, plog.workers)
+    np.testing.assert_array_equal(flog.deltas, plog.deltas)
+    ra = detect_offline(flog, fleet_src.tags, fleet_src.stacks, n_min=1.0)
+    rb = detect_offline(plog, prod_src.tags, prod_src.stacks, n_min=1.0)
+    np.testing.assert_array_equal(ra.per_worker, rb.per_worker)
+    assert ra.total_slices == rb.total_slices
+    assert ra.total_critical == rb.total_critical
+    assert ra.idle_time == rb.idle_time
+    assert _ranked(ra) == _ranked(rb)
+
+    # ---- gate 2: exact reconciliation -------------------------------
+    produced_chunks = accepted_chunks = 0
+    for h in host_order:
+        ps = SpillStore.open_readonly(journals[h])
+        produced_chunks += ps.blocks
+    for mp in sorted(os.listdir(fleet_dir)):
+        if mp.endswith(".meta.json"):
+            m = load_json(os.path.join(fleet_dir, mp))
+            ss = SpillStore.open_readonly(
+                os.path.join(fleet_dir, m["journal"]))
+            accepted_chunks += ss.blocks
+    assert accepted_chunks == produced_chunks, \
+        (accepted_chunks, produced_chunks)
+    assert cum["lost_chunks"] == 0, cum
+    assert final_stats["rows_in"] == folded + final_stats["shed_rows"], \
+        (final_stats["rows_in"], folded, final_stats["shed_rows"])
+
+    faults = {}
+    for _h, kind, _d in plan.events:
+        faults[kind] = faults.get(kind, 0) + 1
+    shutil.rmtree(work_dir, ignore_errors=True)
+    return {
+        "producers": producers,
+        "rounds": rounds,
+        "rows_total": expected_rows,
+        "seed": seed,
+        "wall_s": wall_s,
+        "final_fold_ms": fold_ms,
+        "producer_kills": kills,
+        "server_restarts": restarts_done,
+        "partitions": partitions,
+        "slow_hosts": slow_hosts,
+        "faults_injected": faults,
+        "produced_chunks": produced_chunks,
+        "accepted_chunks": accepted_chunks,
+        "lost_chunks": cum["lost_chunks"],
+        "duplicate_chunks": cum["duplicate_chunks"],
+        "shed_chunks": cum["shed_chunks"],
+        "shed_rows": cum["shed_rows"],
+        "proto_errors": cum["proto_errors"],
+        "deadline_closed": cum["deadline_closed"],
+        "live_report_slices": int(live_rep.total_slices),
+        "oracle_slices": int(ra.total_slices),
+        "recovery_equal": True,
+        "reconciled": True,
+    }
+
+
+def run():
+    res = run_chaos(producers=16, rounds=6, server_restarts=2, kills=4,
+                    partitions=2)
+    yield ("chaos_recovery_equal", res["wall_s"] * 1e6,
+           f"lost={res['lost_chunks']} shed={res['shed_chunks']}")
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run_chaos(), indent=2))

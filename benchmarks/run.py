@@ -98,14 +98,38 @@ def smoke_fleet(producers: int, out: str) -> dict:
     return res
 
 
+def smoke_chaos(producers: int, out: str) -> dict:
+    """Chaos smoke: N journaled producers stream through a seeded
+    FaultPlan (producer kills, server kill/restarts, partitions, slow
+    hosts) while the recovery gates assert bit-equal journals and exact
+    chunk reconciliation (``python -m benchmarks.run --smoke chaos`` ->
+    BENCH_chaos.json).  GATED inside the benchmark: any lost chunk,
+    duplicate fold, or recovered-vs-oracle drift raises."""
+    from benchmarks import bench_chaos
+    res = bench_chaos.run_chaos(producers=producers)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# chaos: {res['producers']} producers, "
+          f"{res['producer_kills']} kills / "
+          f"{res['server_restarts']} server restarts / "
+          f"{res['partitions']} partitions in {res['wall_s']:.1f}s — "
+          f"lost={res['lost_chunks']} dup={res['duplicate_chunks']} "
+          f"shed={res['shed_chunks']} "
+          f"recovery_equal={res['recovery_equal']} -> {out}")
+    return res
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", choices=["detect", "probe", "session",
-                                        "fleet"],
+                                        "fleet", "chaos"],
                     help="run one fast smoke benchmark and write a JSON "
                          "artifact instead of the full CSV harness")
     ap.add_argument("--producers", type=int, default=2,
                     help="producer sessions for --smoke fleet")
+    ap.add_argument("--chaos-producers", type=int, default=64,
+                    help="producer sessions for --smoke chaos")
     ap.add_argument("--n-slices", type=int, default=250_000,
                     help="table size for --smoke detect (~43%% of rows land "
                          "under n_min, so the default yields >=1e5 critical "
@@ -128,6 +152,9 @@ def main() -> None:
         return
     if args.smoke == "fleet":
         smoke_fleet(args.producers, args.out or "BENCH_fleet.json")
+        return
+    if args.smoke == "chaos":
+        smoke_chaos(args.chaos_producers, args.out or "BENCH_chaos.json")
         return
 
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,

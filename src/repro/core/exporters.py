@@ -104,7 +104,25 @@ def export(rep, fmt: str = "text", *, session=None, **kw):
 
 @register_exporter("text", capabilities={"human"})
 def _export_text(rep, *, session=None, **kw) -> str:
-    return render_text(rep, **kw)
+    out = render_text(rep, **kw)
+    if session is not None:
+        try:
+            stats = session.stats()
+        except Exception:
+            stats = {}
+        src = stats.get("source") or {}
+        shed = int(src.get("shed_chunks") or 0)
+        lost = int(src.get("lost_chunks") or 0)
+        idle = int(src.get("idle_hosts") or 0)
+        if shed or lost or idle:
+            # degraded capture: the ranking above folded an incomplete
+            # stream — say so right next to the numbers it skews
+            out += ("\ncapture health: DEGRADED — "
+                    f"{shed} chunk(s) shed under overload "
+                    f"(recoverable from fleet journals), "
+                    f"{lost} chunk(s) lost in transit, "
+                    f"{idle} idle host(s) released from the watermark\n")
+    return out
 
 
 @register_exporter("json", capabilities={"machine", "versioned"})

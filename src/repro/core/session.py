@@ -600,7 +600,7 @@ class ProfileSession:
             if sinks:       # attached transports (e.g. fleet RemoteSinks)
                 out["sinks"] = sinks
             return out
-        return {
+        out = {
             "mode": "offline",
             "events_folded": self._folded,
             "sanitize_dropped": self._sanitize_dropped,
@@ -609,3 +609,9 @@ class ProfileSession:
             "done": self._done.is_set(),
             "watch_errors": len(self.watch_errors),
         }
+        src_stats = getattr(self.source, "stats", None)
+        if callable(src_stats):
+            # e.g. a FleetSource: surfaces shed/lost/idle degradation so a
+            # report consumer can see whether the fold was complete
+            out["source"] = src_stats()
+        return out

@@ -40,12 +40,30 @@ crash mid-append — is cut back to the last complete block, so the resume
 floor is exact), and :meth:`append_block` writes one caller-framed block
 per call with no re-blocking, which pins the invariant journals rely on:
 **block index == append order == chunk seq**.
+
+**Rotation + retention** (week-long captures must not grow one unbounded
+file): with ``rotate_bytes=``/``rotate_age_s=`` the active file rolls
+over once it exceeds the size/age threshold — it is sealed (fsync) and
+renamed to ``<path>.g<first_block>.seg``, and appends continue in a fresh
+``<path>``.  Block indices are GLOBAL across segments (the filename
+records each segment's first block), so *seq == block index* survives any
+number of rollovers, and every reader (:meth:`iter_block_columns`,
+:meth:`iter_chunks`, :meth:`freeze`) spans the whole segment chain
+transparently — including :meth:`open_readonly`/:meth:`open_append` on a
+rotated journal.  ``retain_blocks=`` enables pruning: whole segments are
+deleted once they fall entirely below BOTH the retention horizon
+(``blocks - retain_blocks``) and the **ack floor**
+(:meth:`set_ack_floor` — the consumer's durable receive watermark), so
+retention can never drop a block a replay might still need.  The default
+(``retain_blocks=None``) keeps everything.
 """
 from __future__ import annotations
 
 import os
+import re
 import struct
 import threading
+import time
 from typing import Iterator
 
 import numpy as np
@@ -57,6 +75,10 @@ _COL_DTYPES = (np.int64, np.int32, np.int8, np.int32, np.int32)
 _HEADER = struct.Struct("<Q")
 _ROW_BYTES = sum(np.dtype(dt).itemsize for dt in _COL_DTYPES)
 
+# Sealed rotation segments live next to the active file as
+# ``<path>.g<first_block>.seg`` — the name IS the index metadata.
+_SEG_RE = re.compile(r"\.g(\d+)\.seg$")
+
 
 class SpillStore:
     """Append-only on-disk event store with an O(chunk_events) resident buffer.
@@ -67,14 +89,27 @@ class SpillStore:
     """
 
     def __init__(self, path: str, chunk_events: int = 1 << 16, *,
+                 rotate_bytes: int | None = None,
+                 rotate_age_s: float | None = None,
+                 retain_blocks: int | None = None,
                  _readonly: bool = False, _append: bool = False):
         self.path = str(path)
         self.chunk_events = max(int(chunk_events), 1)
+        self.rotate_bytes = rotate_bytes
+        self.rotate_age_s = rotate_age_s
+        self.retain_blocks = retain_blocks
         self._buf = [np.zeros(self.chunk_events, dt) for dt in _COL_DTYPES]
         self._buf_len = 0
         self._rows_on_disk = 0
-        self._blocks = 0
-        self._bytes_written = 0
+        # sealed segments, oldest first: [path, first_block, nblocks, nrows]
+        self._segments: list[list] = []
+        self._active_first = 0      # global index of the active file's block 0
+        self._active_rows = 0
+        self._active_opened = time.monotonic()
+        self._ack_floor = 0
+        self.pruned_blocks = 0      # blocks dropped by retention (exact)
+        self._blocks = 0            # complete blocks in the ACTIVE file
+        self._bytes_written = 0     # complete bytes in the ACTIVE file
         self._file = None           # lazily opened write handle
         self._closed = _readonly
         self.max_resident_rows = 0  # high-water mark of the RAM buffer
@@ -90,11 +125,17 @@ class SpillStore:
                     and os.path.getsize(self.path) > self._bytes_written:
                 with open(self.path, "r+b") as f:
                     f.truncate(self._bytes_written)
-        elif os.path.exists(self.path):
+        else:
             # a writer store owns its file for exactly one capture: a stale
-            # file from a previous run at the same path must not leak into
-            # this run's freeze()/iter_chunks()
-            os.remove(self.path)
+            # file (or rotated segments) from a previous run at the same
+            # path must not leak into this run's freeze()/iter_chunks()
+            if os.path.exists(self.path):
+                os.remove(self.path)
+            for _first, seg_path in self._segment_paths():
+                try:
+                    os.remove(seg_path)
+                except OSError:
+                    pass
 
     @classmethod
     def open_readonly(cls, path: str,
@@ -104,26 +145,47 @@ class SpillStore:
         return cls(path, chunk_events, _readonly=True)
 
     @classmethod
-    def open_append(cls, path: str,
-                    chunk_events: int = 1 << 16) -> "SpillStore":
+    def open_append(cls, path: str, chunk_events: int = 1 << 16, *,
+                    rotate_bytes: int | None = None,
+                    rotate_age_s: float | None = None,
+                    retain_blocks: int | None = None) -> "SpillStore":
         """Open a journal: existing complete blocks are kept (a torn tail
         from a crash mid-append is truncated away), and new
         :meth:`append_block` calls extend the file — resuming the
-        block-index sequence exactly where the complete history ends."""
-        return cls(path, chunk_events, _append=True)
+        block-index sequence exactly where the complete history ends,
+        across any sealed rotation segments."""
+        return cls(path, chunk_events, _append=True,
+                   rotate_bytes=rotate_bytes, rotate_age_s=rotate_age_s,
+                   retain_blocks=retain_blocks)
 
-    def _scan_existing(self) -> None:
-        """Index an existing file (read-only open): block/row counts come
-        from walking the headers, without reading column payloads.
+    def _segment_paths(self) -> list[tuple[int, str]]:
+        """Sealed segments on disk next to ``self.path``, oldest first, as
+        ``(first_block, path)``.  listdir + exact-name match (not glob):
+        capture paths may contain glob metacharacters."""
+        d = os.path.dirname(self.path) or "."
+        base = os.path.basename(self.path)
+        out: list[tuple[int, str]] = []
+        if not os.path.isdir(d):
+            return out
+        for name in os.listdir(d):
+            m = _SEG_RE.search(name)
+            if m and name == f"{base}.g{m.group(1)}.seg":
+                out.append((int(m.group(1)), os.path.join(d, name)))
+        out.sort()
+        return out
 
-        A truncated tail — a capture cut mid-write (partial header or a
-        header whose payload runs past EOF) — is ignored: the watermark
-        stops at the last *complete* block, so readers never decode a torn
-        payload."""
-        if not os.path.exists(self.path):
-            return
-        size = os.path.getsize(self.path)
-        with open(self.path, "rb") as f:
+    @staticmethod
+    def _scan_file(path: str) -> tuple[int, int, int]:
+        """Walk one file's block headers (payloads are seeked over, not
+        read) -> ``(complete_blocks, rows, complete_bytes)``.  A truncated
+        tail — a capture cut mid-write (partial header or a header whose
+        payload runs past EOF) — is excluded, so readers never decode a
+        torn payload."""
+        if not os.path.exists(path):
+            return 0, 0, 0
+        size = os.path.getsize(path)
+        blocks = rows = nbytes = 0
+        with open(path, "rb") as f:
             while True:
                 hdr = f.read(_HEADER.size)
                 if len(hdr) < _HEADER.size:
@@ -133,21 +195,57 @@ class SpillStore:
                 if end > size:
                     break           # torn tail block: exclude from watermark
                 f.seek(end)
-                self._rows_on_disk += n
-                self._blocks += 1
-                self._bytes_written += _HEADER.size + n * _ROW_BYTES
+                rows += n
+                blocks += 1
+                nbytes += _HEADER.size + n * _ROW_BYTES
+        return blocks, rows, nbytes
+
+    def _scan_existing(self) -> None:
+        """Index an existing capture: sealed rotation segments first (their
+        filenames carry the global first-block index), then the active
+        file.  Block indices resume exactly where the history ends."""
+        for first, seg_path in self._segment_paths():
+            nblocks, nrows, _ = self._scan_file(seg_path)
+            if nblocks == 0:
+                continue
+            self._segments.append([seg_path, first, nblocks, nrows])
+            self._rows_on_disk += nrows
+            self._active_first = first + nblocks
+        nblocks, nrows, nbytes = self._scan_file(self.path)
+        self._blocks = nblocks
+        self._rows_on_disk += nrows
+        self._bytes_written = nbytes
 
     # -- write side ----------------------------------------------------------
     def _write_cols(self, cols, n: int) -> None:
         """Frame ``n`` rows of ``cols`` as one block (caller holds the
-        lock)."""
+        lock).  Failure-atomic: if the write raises mid-frame (disk full),
+        the partial frame is truncated away so the file still ends on a
+        block boundary — a failed append consumes no block index, which
+        the fleet journals' seq == block-index invariant depends on."""
         if self._file is None:
             self._file = open(self.path, "ab")
-        self._file.write(_HEADER.pack(n))
-        for col in cols:
-            self._file.write(col[:n].tobytes())
-        self._file.flush()          # readers bound themselves to flushed bytes
+            self._active_opened = time.monotonic()
+        start = self._bytes_written
+        try:
+            self._file.write(_HEADER.pack(n))
+            for col in cols:
+                self._file.write(col[:n].tobytes())
+            self._file.flush()      # readers bound themselves to flushed bytes
+        except OSError:
+            try:
+                self._file.close()
+            except OSError:
+                pass
+            self._file = None
+            try:
+                with open(self.path, "r+b") as f:
+                    f.truncate(start)
+            except OSError:         # pragma: no cover - fs fully wedged
+                pass
+            raise
         self._rows_on_disk += n
+        self._active_rows += n
         self._blocks += 1
         self._bytes_written += _HEADER.size + n * _ROW_BYTES
 
@@ -168,7 +266,9 @@ class SpillStore:
         usually cannot afford (the fleet transports expose this as an
         opt-in).  Returns the block index — with every append routed
         through here, block index == append order, which the fleet
-        journals equate with the chunk ``seq``."""
+        journals equate with the chunk ``seq``.  Indices are global across
+        rotated segments, and the rotation check runs after each append
+        (the journal path is the only rotating writer)."""
         if self._closed:
             raise ValueError(f"SpillStore({self.path}) is closed")
         cols = tuple(np.ascontiguousarray(c, dt) for c, dt in
@@ -182,7 +282,70 @@ class SpillStore:
             self._write_cols(cols, n)
             if sync:
                 os.fsync(self._file.fileno())
-            return self._blocks - 1
+            idx = self._active_first + self._blocks - 1
+            self._maybe_roll_locked()
+            return idx
+
+    def _maybe_roll_locked(self) -> None:
+        """Seal the active file into a ``.g<first_block>.seg`` segment when
+        it exceeds the size/age threshold (caller holds the lock).  The
+        seal fsyncs before the rename, so a sealed segment is always a
+        complete, power-loss-durable unit."""
+        if self._blocks == 0:
+            return
+        due = (self.rotate_bytes is not None
+               and self._bytes_written >= self.rotate_bytes) \
+            or (self.rotate_age_s is not None
+                and time.monotonic() - self._active_opened
+                >= self.rotate_age_s)
+        if not due:
+            return
+        if self._file is None:      # pragma: no cover - blocks>0 implies open
+            self._file = open(self.path, "ab")
+        self._file.flush()
+        os.fsync(self._file.fileno())
+        self._file.close()
+        self._file = None
+        seg = f"{self.path}.g{self._active_first:010d}.seg"
+        os.replace(self.path, seg)
+        self._segments.append([seg, self._active_first, self._blocks,
+                               self._active_rows])
+        self._active_first += self._blocks
+        self._blocks = 0
+        self._bytes_written = 0
+        self._active_rows = 0
+        self._active_opened = time.monotonic()
+        self._prune_locked()
+
+    def set_ack_floor(self, seq: int) -> None:
+        """Raise the consumer-durability watermark: every block below
+        ``seq`` is known journaled on the receiving side, so retention may
+        prune it.  Monotonic; triggers a prune sweep."""
+        with self._lock:
+            if int(seq) > self._ack_floor:
+                self._ack_floor = int(seq)
+            self._prune_locked()
+
+    def _prune_locked(self) -> None:
+        """Delete whole sealed segments that fall entirely below BOTH the
+        ack floor and the retention horizon (``blocks - retain_blocks``).
+        Never touches the active file, never splits a segment, and with
+        ``retain_blocks=None`` (the default) never deletes anything."""
+        if self.retain_blocks is None:
+            return
+        total = self._active_first + self._blocks
+        keep_from = min(self._ack_floor, total - int(self.retain_blocks))
+        while self._segments:
+            seg_path, first, nblocks, nrows = self._segments[0]
+            if first + nblocks > keep_from:
+                break
+            self._segments.pop(0)
+            self._rows_on_disk -= nrows
+            self.pruned_blocks += nblocks
+            try:
+                os.remove(seg_path)
+            except OSError:         # pragma: no cover - best-effort unlink
+                pass
 
     def append_columns(self, times, workers, deltas, tags, stacks) -> None:
         e = len(times)
@@ -233,8 +396,22 @@ class SpillStore:
 
     @property
     def blocks(self) -> int:
-        """Complete blocks on disk (== the next append_block index)."""
-        return self._blocks
+        """Complete blocks ever written (== the next append_block index).
+        Global across rotated segments; pruning does NOT lower it — block
+        indices are stable forever."""
+        return self._active_first + self._blocks
+
+    @property
+    def first_block(self) -> int:
+        """Global index of the oldest block still on disk (0 until
+        retention pruning removes a segment)."""
+        return self._segments[0][1] if self._segments else self._active_first
+
+    @property
+    def segments(self) -> int:
+        """Sealed rotation segments currently on disk (excludes the active
+        file)."""
+        return len(self._segments)
 
     @property
     def resident_rows(self) -> int:
@@ -254,7 +431,9 @@ class SpillStore:
 
     @property
     def spilled_nbytes(self) -> int:
-        return self._rows_on_disk * _ROW_BYTES + self._blocks * _HEADER.size
+        on_disk_blocks = (self._active_first + self._blocks
+                          - self.first_block)
+        return self._rows_on_disk * _ROW_BYTES + on_disk_blocks * _HEADER.size
 
     # -- read side -----------------------------------------------------------
     def _read_limit(self) -> int:
@@ -267,9 +446,30 @@ class SpillStore:
 
     def _read_blocks(self, limit: int,
                      skip: int = 0) -> Iterator[tuple[np.ndarray, ...]]:
-        if limit <= 0 or not os.path.exists(self.path):
+        """Stream complete blocks across the whole segment chain, then the
+        active file (bounded to ``limit`` active-file bytes).  ``skip`` is
+        a GLOBAL block index: blocks below it — and any prefix already
+        removed by retention pruning — are seeked over, not decoded."""
+        segments = list(self._segments)     # snapshot vs concurrent prune
+        first_kept = segments[0][1] if segments else self._active_first
+        skip = max(0, skip - first_kept)    # pruned prefix needs no seeking
+        for seg_path, _first, nblocks, _nrows in segments:
+            if skip >= nblocks:
+                skip -= nblocks
+                continue
+            try:
+                seg_limit = os.path.getsize(seg_path)
+            except OSError:
+                continue                    # pruned between snapshot and read
+            yield from self._read_file(seg_path, seg_limit, skip)
+            skip = 0
+        yield from self._read_file(self.path, limit, skip)
+
+    def _read_file(self, path: str, limit: int,
+                   skip: int = 0) -> Iterator[tuple[np.ndarray, ...]]:
+        if limit <= 0 or not os.path.exists(path):
             return
-        with open(self.path, "rb") as f:
+        with open(path, "rb") as f:
             while skip > 0 and f.tell() < limit:
                 # skipped blocks are seeked over, not decoded: a journal
                 # replay of a long capture's tail must not re-read (and

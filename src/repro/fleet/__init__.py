@@ -21,8 +21,66 @@ Offline, the same merge ingests spill files copied off the hosts::
 Importing this package also registers the ``"remote"`` exporter
 (``session.export("remote", addr=(host, port))``); :mod:`repro.core`
 loads it lazily on first use.
+
+Failure modes & guarantees
+--------------------------
+
+What happens to in-flight data under each failure, with journaling on
+both sides (producer ``journal_path=``, server ``fleet_dir=``).
+*Recovered* means the rows reappear (live replay or offline
+``FleetSource.from_fleet_dir`` / ``from_producer_journals``);
+*counted-lost* means the rows are gone but the loss is counted
+(``lost_chunks`` — never silent); *shed* means live-report rows over the
+``max_pending_rows`` budget were dropped from the merge but remain
+journaled (``shed_chunks``/``shed_rows``; offline replay recovers them).
+
+==========================  =============================================
+failure                     guarantee
+==========================  =============================================
+producer killed (-9)        unsent chunks survive in its journal; a
+                            restarted sink on the same ``journal_path``
+                            resumes the capture instance and replays from
+                            the server's ack floor → **recovered**
+server killed               journals + meta sidecars in ``fleet_dir``
+                            persist; a restarted server restores dedup
+                            floors, backfills history, producers
+                            reconnect and replay unacked chunks →
+                            **recovered**
+network partition           producer backs off (full-jitter) and
+                            replays journaled chunks on reconnect →
+                            **recovered**; without a producer journal
+                            the gap is **counted-lost**
+producer disk full          the chunk is dropped whole before consuming
+                            a seq (``journal_errors``/``dropped_chunks``)
+                            → **counted-lost**, dedup floor intact
+server disk full            the chunk is REFUSED (connection closed, no
+                            commit); the producer replays it once the
+                            disk recovers → **recovered**
+slow / stalled producer     ``read_deadline`` reclaims dead connections;
+                            ``idle_release`` (or an idle heartbeat)
+                            exempts the host from the merge watermark so
+                            it cannot stall healthy hosts; late data
+                            clamps like any late joiner
+merge overload              journaled hosts: oldest buffered chunks are
+                            **shed** (recoverable offline); non-journaled
+                            hosts: reads pause (lossless backpressure)
+corrupted frame             header/schema validation rejects the frame
+                            (``proto_errors``) — corruption is detected,
+                            never folded
+==========================  =============================================
+
+A ``sink.close()`` is a *delivery barrier*: the server closes a
+connection only after consuming its BYE, and a dying server RESETS every
+connection it abandons — so a clean close proves the whole stream was
+folded, and a flush into a dead socket's buffers can never pass as
+delivery.
+
+Every one of these is reproducible deterministically with
+:class:`repro.fleet.faults.FaultPlan` (see ``benchmarks/bench_chaos.py``
+for the 64-producer chaos gate).
 """
 from repro.fleet.aggregate import FleetSource, HostStream
+from repro.fleet.faults import FaultPlan
 from repro.fleet.transport import IngestServer, RemoteSink, attach_remote
 from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD, RAW,
                               SUPPORTED_CODECS, WIRE_VERSION, ZLIB,
@@ -30,7 +88,7 @@ from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD, RAW,
                               negotiate_codec, pack_frame, read_frame)
 
 __all__ = [
-    "FleetSource", "HostStream", "IngestServer", "RemoteSink",
+    "FaultPlan", "FleetSource", "HostStream", "IngestServer", "RemoteSink",
     "attach_remote", "WIRE_VERSION", "WireError", "ChunkFrame",
     "encode_chunk", "decode_chunk", "pack_frame", "read_frame",
     "CHUNK", "HELLO", "MERGED_SHARD", "RAW", "ZLIB", "SUPPORTED_CODECS",

@@ -158,6 +158,11 @@ class HostStream:
         # low watermark: every future row of this host has time >= this
         # (per-host streams are time-ordered — the tracer store order)
         self.last_seen_ns: int | None = None
+        # a host that went silent (no CHUNK before the server's
+        # idle_release deadline) is exempted from the merge watermark so
+        # it cannot pin every other host's emission; data arriving later
+        # re-arms it (and may be clamped+counted, like a late HELLO)
+        self.idle_exempt = False
 
     # -- intake --------------------------------------------------------------
     def push(self, times, workers, deltas, tags, stacks) -> int:
@@ -177,7 +182,34 @@ class HostStream:
         self.rows_in += n
         self.chunks_in += 1
         self.last_seen_ns = int(t[-1])
+        self.idle_exempt = False        # data re-arms the watermark
         return n
+
+    def advance_watermark(self, t_ns: int) -> None:
+        """Raise the low watermark WITHOUT data (HEARTBEAT): the producer
+        asserts every row it will ever stream after this has capture time
+        >= ``t_ns`` (its store order guarantees it — t_ns is the last
+        already-streamed row's time).  Normalized like :meth:`push`;
+        never moves backwards."""
+        t = int(t_ns) + self.clock_offset_ns
+        if self.last_seen_ns is None or t > self.last_seen_ns:
+            self.last_seen_ns = t
+
+    def shed_oldest(self, max_rows: int) -> tuple[int, int]:
+        """Load shedding: front-evict whole buffered chunks, oldest
+        first, until at most ``max_rows`` rows remain buffered.  Returns
+        ``(chunks, rows)`` evicted.  The stream stays time-ordered and
+        the watermark is untouched, so the merge keeps advancing; only
+        callers whose chunks are journaled should shed — the evicted
+        prefix then degrades to "replay offline later", never loss."""
+        chunks = rows = 0
+        while self._parts and self._buffered > max_rows:
+            part = self._parts.popleft()
+            n = len(part[0])
+            self._buffered -= n
+            chunks += 1
+            rows += n
+        return chunks, rows
 
     def finish(self) -> None:
         self.finished = True
@@ -261,6 +293,12 @@ class FleetSource(EventSource):
         self.hosts: list[HostStream] = []
         self.cond = threading.Condition()
         self.clock_clamped = 0
+        # exact load-shedding ledger (incremented by the transport under
+        # self.cond): shed chunks were journaled first, so they are
+        # recoverable offline — the live report is approximate by exactly
+        # this much
+        self.shed_chunks = 0
+        self.shed_rows = 0
         self._t_emitted: int | None = None
         self._stop = False
         # a live transport (IngestServer) sets this while it can still
@@ -268,10 +306,12 @@ class FleetSource(EventSource):
         # every current host finished (file mode leaves it False, so the
         # stream ends when the last file is drained)
         self.accepting = False
-        # from_files/from_fleet_dir record their inputs here so full_log()
-        # can re-open the files instead of consuming the live feeds
+        # from_files/from_fleet_dir/from_producer_journals record their
+        # inputs here so full_log() can re-open the files instead of
+        # consuming the live feeds
         self._file_recipe: dict | None = None
         self._dir_recipe: dict | None = None
+        self._producer_recipe: dict | None = None
 
     # -- host management -----------------------------------------------------
     def add_host(self, host_id: str, num_workers: int,
@@ -330,6 +370,9 @@ class FleetSource(EventSource):
             "chunks_in": sum(h.chunks_in for h in self.hosts),
             "buffered_rows": sum(h.buffered_rows for h in self.hosts),
             "clock_clamped": self.clock_clamped,
+            "shed_chunks": self.shed_chunks,
+            "shed_rows": self.shed_rows,
+            "idle_hosts": sum(1 for h in self.hosts if h.idle_exempt),
             "accepting": self.accepting,
         }
 
@@ -423,6 +466,43 @@ class FleetSource(EventSource):
                            "chunk_events": chunk_events}
         return src
 
+    @classmethod
+    def from_producer_journals(cls, paths: list[str], *,
+                               tags: TagRegistry | None = None,
+                               stacks: StackRegistry | None = None,
+                               clock_offsets_ns: list[int] | None = None,
+                               chunk_events: int = 1 << 16) -> "FleetSource":
+        """Offline ingest over PRODUCER-side durable journals
+        (``RemoteSink(journal=...)``) — the union of everything each
+        producer ever captured, independent of what any server received.
+        Each path's ``.meta.json`` sidecar supplies the host identity,
+        worker table and registry entries (the same resume state a sink
+        restart reads).  Hosts are ordered as given: pass the paths in
+        the server's ``host_index`` order to reproduce the live fleet's
+        worker-id layout, making this the ground-truth oracle the chaos
+        harness compares recovered merges against."""
+        src = cls(tags=tags, stacks=stacks, chunk_events=chunk_events)
+        for i, path in enumerate(paths):
+            meta = load_json(str(path) + ".meta.json") or {}
+            store = SpillStore.open_readonly(path, chunk_events)
+            nw = int(meta.get("num_workers") or 0) \
+                or _scan_num_workers(store)
+            off = (clock_offsets_ns[i] if clock_offsets_ns is not None
+                   else int(meta.get("clock_offset_ns") or 0))
+            h = src.add_host(
+                str(meta.get("host_id") or _default_host_name(path, i)),
+                nw, meta.get("worker_names"), clock_offset_ns=off,
+                feed=_file_feed(store, nw))
+            restore_host_maps(h, src.tags, src.stacks, meta.get("tags"),
+                              meta.get("stacks"))
+        src._producer_recipe = {
+            "paths": [str(p) for p in paths],
+            "clock_offsets_ns": (None if clock_offsets_ns is None
+                                 else list(clock_offsets_ns)),
+            "chunk_events": chunk_events,
+        }
+        return src
+
     def full_log(self) -> EventLog:
         """Materialize the merged fleet log.  File-backed sources re-open
         their files (repeatable, like LogSource/SpillSource — the session's
@@ -434,6 +514,9 @@ class FleetSource(EventSource):
             # produces identical fleet tag/stack ids
             fresh = FleetSource.from_fleet_dir(
                 **self._dir_recipe, tags=self.tags, stacks=self.stacks)
+        elif self._producer_recipe is not None:
+            fresh = FleetSource.from_producer_journals(
+                **self._producer_recipe, tags=self.tags, stacks=self.stacks)
         else:
             raise RuntimeError("full_log(): live ingest streams have no "
                                "rewind (only FleetSource.from_files / "
@@ -495,10 +578,21 @@ class FleetSource(EventSource):
                 # accept more: emit everything, keep the stream open
                 parts = [p for h in self.hosts for p in h.take_below(None)]
                 return (parts or None), False
+            # idle-exempt hosts (silent past the server's idle_release
+            # deadline) do not gate the watermark: a producer that
+            # handshook and then died must not pin every healthy host's
+            # emission.  If they wake up late, their rows clamp like any
+            # late-HELLO host's.
+            gating = [h for h in unfinished if not h.idle_exempt]
+            if not gating:
+                # every live host is idle: flush what is buffered (idle
+                # hosts buffer nothing new by definition), keep streaming
+                parts = [p for h in self.hosts for p in h.take_below(None)]
+                return (parts or None), False
             if not self.hosts or any(h.last_seen_ns is None
-                                     for h in unfinished):
+                                     for h in gating):
                 return None, False  # a host has not produced yet: no floor
-            watermark = min(h.last_seen_ns for h in unfinished)
+            watermark = min(h.last_seen_ns for h in gating)
             parts = [p for h in self.hosts for p in h.take_below(watermark)]
             if parts:
                 return parts, False

@@ -49,8 +49,11 @@ from __future__ import annotations
 
 import hashlib
 import os
+import random
 import re
+import selectors
 import socket
+import struct
 import threading
 import time
 import uuid
@@ -112,8 +115,14 @@ class RemoteSink:
                  clock_offset_ns: int | None = None,
                  max_buffer_chunks: int = 256, drop_when_full: bool = False,
                  reconnect_delay: float = 0.05, max_reconnects: int = 64,
+                 backoff_max: float = 1.0, backoff_seed: int | None = None,
+                 heartbeat_interval: float | None = 5.0,
                  connect_timeout: float = 5.0, journal: str | None = None,
                  journal_fsync: bool = False,
+                 journal_rotate_bytes: int | None = None,
+                 journal_rotate_age_s: float | None = None,
+                 journal_retain_blocks: int | None = None,
+                 fault_plan=None,
                  codecs: tuple[str, ...] = wire.SUPPORTED_CODECS):
         self.addr = tuple(addr)
         self.host_id = str(host_id)
@@ -126,7 +135,17 @@ class RemoteSink:
         self.drop_when_full = drop_when_full
         self.reconnect_delay = float(reconnect_delay)
         self.max_reconnects = int(max_reconnects)
+        # reconnect backoff: exponential, capped at backoff_max, with FULL
+        # jitter — after an aggregator restart a whole fleet redials, and
+        # deterministic delays would thunder back in lockstep forever
+        self.backoff_max = float(backoff_max)
+        self._backoff_rng = random.Random(backoff_seed)
+        # liveness beacons while idle (only to servers that advertised
+        # wire v3+); None disables
+        self.heartbeat_interval = (None if heartbeat_interval is None
+                                   else float(heartbeat_interval))
         self.connect_timeout = float(connect_timeout)
+        self.fault_plan = fault_plan
         self.codecs = tuple(codecs)
         self.codec = wire.RAW       # negotiated per connection (WELCOME)
         self.ack_seq: int | None = None     # server floor, last WELCOME
@@ -141,6 +160,10 @@ class RemoteSink:
         self._thread: threading.Thread | None = None
         self.host_index: int | None = None
         self.epoch: int | None = None
+        self.server_wire_version = 1    # learned from WELCOME (v3+ servers)
+        self._last_sent_t: int | None = None    # capture time, last row sent
+        self._cur_sock: socket.socket | None = None
+        self._abort = False
         self._next_seq = 0          # chunk sequence, NOT reset on reconnect:
         #                             the server dedups retransmits by it
         self.instance = uuid.uuid4().hex    # capture nonce (see wire HELLO)
@@ -155,6 +178,8 @@ class RemoteSink:
         self.send_errors = 0
         self.replayed_chunks = 0
         self.replayed_rows = 0
+        self.heartbeats_sent = 0
+        self.journal_errors = 0     # journal appends that raised (disk full)
         self.wire_bytes = 0         # bytes actually written to the socket
         self.raw_bytes = 0          # what the same frames cost uncompressed
         self.last_error: Exception | None = None
@@ -167,9 +192,13 @@ class RemoteSink:
         self._journal: SpillStore | None = None
         self._meta_path: str | None = None
         self._journal_workers: tuple[int, list[str]] = (0, [])
+        self._journal_kw = dict(rotate_bytes=journal_rotate_bytes,
+                                rotate_age_s=journal_rotate_age_s,
+                                retain_blocks=journal_retain_blocks)
         if self.journal_path is not None:
             self._meta_path = self.journal_path + ".meta.json"
-            self._journal = SpillStore.open_append(self.journal_path)
+            self._journal = SpillStore.open_append(self.journal_path,
+                                                   **self._journal_kw)
             meta = load_json(self._meta_path)
             if meta and meta.get("instance"):
                 # RESUME a previous incarnation of this capture: repeat its
@@ -193,10 +222,18 @@ class RemoteSink:
                 # keeps successive orphans from clobbering each other) and
                 # start clean
                 self._journal.close()
-                os.replace(self.journal_path,
-                           f"{self.journal_path}.orphaned-{self.instance[:8]}")
-                self._journal = SpillStore(self.journal_path)
+                suffix = f".orphaned-{self.instance[:8]}"
+                for _first, seg in self._journal._segment_paths():
+                    os.replace(seg, seg + suffix)
+                if os.path.exists(self.journal_path):
+                    os.replace(self.journal_path,
+                               self.journal_path + suffix)
+                self._journal = SpillStore(self.journal_path,
+                                           **self._journal_kw)
             self._next_seq = self._journal.blocks
+            if self.fault_plan is not None:
+                self._journal = self.fault_plan.wrap_journal(self.host_id,
+                                                             self._journal)
             self._write_meta()
 
     # -- durable journal helpers ---------------------------------------------
@@ -247,6 +284,7 @@ class RemoteSink:
             "host_id": self.host_id, "instance": self.instance,
             "next_seq": self._next_seq, "tags": tags, "stacks": stacks,
             "num_workers": nw, "worker_names": names,
+            "clock_offset_ns": self.clock_offset_ns,
         })
         self._meta_counts = (nt, ns)
 
@@ -277,8 +315,19 @@ class RemoteSink:
                 # journaled history whose ids a resume cannot resolve
                 if self._registry_counts() != self._meta_counts:
                     self._write_meta()
-                seq = self._journal.append_block(*item,
-                                                 sync=self.journal_fsync)
+                try:
+                    seq = self._journal.append_block(*item,
+                                                     sync=self.journal_fsync)
+                except OSError as e:
+                    # disk full: the failed append consumed NO block (the
+                    # store truncates the partial frame), so dropping the
+                    # chunk whole keeps seq == block-index intact — the
+                    # chunk exists on NEITHER side, which the accounting
+                    # (journal_errors + dropped_chunks) states exactly
+                    self.journal_errors += 1
+                    self.dropped_chunks += 1
+                    self.last_error = e
+                    return
                 self._next_seq = seq + 1
             while len(self._q) >= self._q_cap and not self.failed:
                 self._not_full.wait(0.05)       # backpressure on the drain
@@ -341,15 +390,53 @@ class RemoteSink:
                 self._journal.close()
                 self._journal = None
 
+    def abort(self) -> None:
+        """Ungraceful kill (chaos/testing): sever the socket mid-stream —
+        no flush, no BYE — and stop the sender, like the process died.
+        Queued chunks are discarded; a journaled capture loses nothing
+        (a new sink opened on the same journal resumes the instance and
+        the reconnect replay re-delivers whatever the server missed)."""
+        self._abort = True
+        with self._lock:
+            self._closing = True
+            self._q.clear()
+            self._pending = 0
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+            self._drained.notify_all()
+        sock = self._cur_sock
+        if sock is not None:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        if self._thread is not None:
+            self._thread.join(2.0)
+        with self._lock:
+            if self._journal is not None:
+                # seal for fd hygiene only — no meta write: the journal is
+                # crash-consistent by construction, and resume trusts the
+                # block count, not this process's dying breath
+                self._journal.close()
+                self._journal = None
+
     def stats(self) -> dict:
         return {"host_id": self.host_id, "rows_sent": self.rows_sent,
                 "chunks_sent": self.chunks_sent,
                 "dropped_chunks": self.dropped_chunks,
+                "pending": self._pending,
                 "reconnects": self.reconnects,
                 "send_errors": self.send_errors, "failed": self.failed,
                 "codec": self.codec,
                 "replayed_chunks": self.replayed_chunks,
                 "replayed_rows": self.replayed_rows,
+                "heartbeats_sent": self.heartbeats_sent,
+                "journal_errors": self.journal_errors,
+                "server_wire_version": self.server_wire_version,
                 "wire_bytes": self.wire_bytes, "raw_bytes": self.raw_bytes,
                 "journal": self.journal_path}
 
@@ -360,10 +447,15 @@ class RemoteSink:
         return v() if callable(v) else v
 
     def _connect(self):
+        conn_idx = 0
+        if self.fault_plan is not None:
+            conn_idx = self.fault_plan.connect(self.host_id)
         sock = socket.create_connection(self.addr,
                                         timeout=self.connect_timeout)
         sock.settimeout(self.connect_timeout)
         f = sock.makefile("rwb")
+        if self.fault_plan is not None:
+            f = self.fault_plan.wrap_producer(self.host_id, f, conn_idx)
         nw, names = self._worker_table()
         self._send(f, wire.encode_hello(
             self.host_id, nw, names, t_client_ns=int(self.clock()),
@@ -376,8 +468,13 @@ class RemoteSink:
         w = wire.decode_json(frame[1])
         self.host_index = int(w["host_index"])
         self.epoch = int(w["epoch"])
+        self.server_wire_version = int(w.get("server_wire_version", 1))
         ack = w.get("ack_seq")              # absent on a v1 server
         self.ack_seq = None if ack is None else int(ack)
+        if self._journal is not None and self.ack_seq is not None:
+            # acked blocks are durable server-side: release them to the
+            # journal's retention policy (no-op without retain_blocks=)
+            self._journal.set_ack_floor(self.ack_seq)
         codec = w.get("codec", wire.RAW)    # server's pick from our offer
         self.codec = codec if codec in self.codecs else wire.RAW
         # rewind the registry sync counters to the server's high-water
@@ -422,6 +519,8 @@ class RemoteSink:
                 seq, *cols, codec=self.codec))
             self.replayed_chunks += 1
             self.replayed_rows += len(cols[0])
+            if len(cols[0]):
+                self._last_sent_t = int(cols[0][-1])
             seq += 1
         f.flush()
         # same commit rule as the live path: a flush that raised re-runs
@@ -452,17 +551,31 @@ class RemoteSink:
                 stacks_n = n
         return tags_n, stacks_n
 
+    def _backoff(self, attempts: int) -> None:
+        """Full-jitter exponential backoff: sleep uniform(0, min(cap,
+        base * 2^attempts)).  Jitter decorrelates a fleet of producers
+        redialing a restarted aggregator — fixed delays would keep the
+        whole fleet thundering in lockstep."""
+        cap = min(self.backoff_max,
+                  self.reconnect_delay * (1 << min(attempts, 16)))
+        delay = self._backoff_rng.uniform(0.0, cap)
+        if delay > 0:
+            time.sleep(delay)
+
     def _run(self) -> None:
         sock = f = None
         item = None
         attempts = 0
-        while True:
+        last_io = time.monotonic()
+        while not self._abort:
             try:
                 if f is None:       # connect eagerly: handshake ASAP so the
                     #                 server learns this host before data
                     if attempts > 0:
-                        time.sleep(min(self.reconnect_delay * attempts, 1.0))
+                        self._backoff(attempts)
                     sock, f = self._connect()
+                    self._cur_sock = sock
+                    last_io = time.monotonic()
                     # journaled sinks replay the server's unacked tail
                     # before anything queued — seq gaps (lost in-flight
                     # chunks, producer restarts) become recovered history.
@@ -493,11 +606,36 @@ class RemoteSink:
                             item = self._q.popleft()
                             self._not_full.notify_all()
                     if item is None:
+                        # idle: beacon liveness (and the safe watermark of
+                        # the last streamed row) to v3+ servers so a quiet
+                        # host neither trips the server's read deadline
+                        # nor pins the fleet merge
+                        if (self.heartbeat_interval is not None
+                                and self.server_wire_version >= 3
+                                and time.monotonic() - last_io
+                                >= self.heartbeat_interval):
+                            self._send(f, wire.encode_heartbeat(
+                                self._last_sent_t, codec=self.codec))
+                            f.flush()
+                            self.heartbeats_sent += 1
+                            last_io = time.monotonic()
                         continue
                 if item is self._CLOSE:
                     self._send(f, wire.encode_bye(self.rows_sent,
                                                   self.chunks_sent))
                     f.flush()
+                    # Delivery barrier.  flush() only proves the kernel
+                    # buffered the bytes — a server that died mid-close can
+                    # eat the whole tail of the stream (chunks AND the BYE)
+                    # without the writer ever seeing an error.  The server
+                    # closes the connection after it has *read* the BYE, so
+                    # a clean EOF here proves every prior byte was consumed
+                    # (the FIN is ordered after them); an RST (close with
+                    # our unread data pending) or a timeout means delivery
+                    # is uncertain — go around: reconnect, replay the
+                    # unacked journal tail, and BYE again.
+                    if f.read(1) != b"":
+                        raise wire.WireError("unexpected data after BYE")
                     break
                 seq, cols = item
                 tags_n, stacks_n = self._sync_registries(f)
@@ -512,11 +650,16 @@ class RemoteSink:
                 self._tags_sent, self._stacks_sent = tags_n, stacks_n
                 self.rows_sent += len(cols[0])
                 self.chunks_sent += 1
+                if len(cols[0]):
+                    self._last_sent_t = int(cols[0][-1])
+                last_io = time.monotonic()
                 with self._lock:
                     self._pending -= 1
                     self._drained.notify_all()
                 item = None
             except (OSError, wire.WireError) as e:   # reconnect w/ backoff
+                if self._abort:
+                    return
                 self.send_errors += 1
                 self.last_error = e
                 if f is not None:
@@ -526,6 +669,7 @@ class RemoteSink:
                     except OSError:
                         pass
                     f = sock = None
+                    self._cur_sock = None
                 attempts += 1
                 if attempts > self.max_reconnects:
                     self._fail()
@@ -538,11 +682,13 @@ class RemoteSink:
                 self.last_error = e
                 self._fail()
                 return
-        try:
-            f.close()
-            sock.close()
-        except OSError:
-            pass
+        self._cur_sock = None
+        if f is not None:
+            try:
+                f.close()
+                sock.close()
+            except OSError:
+                pass
         with self._lock:
             self._drained.notify_all()
 
@@ -602,6 +748,13 @@ def _export_remote(rep, *, session=None, addr=None, **kw):
 # consumer: IngestServer
 # ---------------------------------------------------------------------------
 
+class _RefuseChunk(Exception):
+    """Internal: a chunk could not be journaled (disk full) — the server
+    refuses it WITHOUT advancing the dedup floor and drops the
+    connection, so the producer's reconnect replay re-delivers it once
+    the disk recovers.  Not a protocol error."""
+
+
 class _HostState:
     """Server-side per-host bookkeeping (maps live on the HostStream)."""
 
@@ -612,6 +765,8 @@ class _HostState:
         self.next_seq = 0           # dedup floor across reconnects
         self.rows_declared: int | None = None
         self.got_bye = False
+        self.open_conns = 0
+        self.last_activity = time.monotonic()   # any frame from this host
         self.codec = wire.RAW       # negotiated for the latest connection
         # fleet_dir durability: per-host journal + resume meta
         self.journal: SpillStore | None = None
@@ -628,8 +783,33 @@ class _HostState:
         self.lock = threading.Lock()
 
 
+class _Conn:
+    """One producer connection's event-loop state (owned by the loop
+    thread; no lock)."""
+
+    __slots__ = ("sock", "rbuf", "wbuf", "st", "last_rx", "paused",
+                 "closed", "mask")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.rbuf = bytearray()
+        self.wbuf = bytearray()
+        self.st: _HostState | None = None   # set by HELLO
+        self.last_rx = time.monotonic()
+        self.paused = False     # read interest shed (flow control)
+        self.closed = False
+        self.mask = selectors.EVENT_READ
+
+    def fileno(self) -> int:
+        return self.sock.fileno()
+
+
 class IngestServer:
-    """Threaded ingest endpoint: N producer connections → one FleetSource.
+    """Event-loop ingest endpoint: N producer connections → one
+    FleetSource, served by ONE selector thread (the thread-per-connection
+    model stopped scaling past a few dozen producers, and its fixed 30s
+    blocking reads let a silently-dead producer pin the merge watermark
+    for that long).
 
     ::
 
@@ -641,6 +821,23 @@ class IngestServer:
         server.wait_idle()                  # every producer said BYE
         rep = sess.result()                 # fleet-wide report
         server.close()
+
+    Liveness & degradation knobs:
+
+    * ``read_deadline`` — a connection that delivers NO bytes for this
+      long is closed (``deadline_closed``).  v3 producers heartbeat while
+      idle, so only dead peers trip it.
+    * ``idle_release`` — a host with no frame activity for this long is
+      exempted from the merge watermark (``idle_released``;
+      ``source.stats()["idle_hosts"]``) so it cannot stall every healthy
+      host's emission; data arriving later re-arms gating (and clamps,
+      like any late joiner).
+    * ``max_pending_rows`` — per-host merge-buffer budget.  Journaled
+      hosts (``fleet_dir=``) shed their OLDEST buffered chunks over
+      budget (``shed_chunks``/``shed_rows`` — recoverable offline via
+      ``from_fleet_dir``, so overload degrades the live report, never
+      history); non-journaled hosts are read-paused instead (lossless
+      TCP backpressure back to the producer).
     """
 
     def __init__(self, addr: tuple[str, int] = ("127.0.0.1", 0), *,
@@ -648,10 +845,23 @@ class IngestServer:
                  chunk_events: int = 1 << 16, backlog: int = 16,
                  clock=time.time_ns, fleet_dir: str | None = None,
                  fleet_fsync: bool = False,
+                 fleet_rotate_bytes: int | None = None,
+                 read_deadline: float | None = 30.0,
+                 idle_release: float | None = 30.0,
+                 max_pending_rows: int | None = None,
+                 fault_plan=None,
                  compression: str | None = wire.ZLIB):
         self.source = source if source is not None else FleetSource(
             tags=tags, stacks=stacks, chunk_events=chunk_events)
         self.clock = clock
+        self.read_deadline = (None if read_deadline is None
+                              else float(read_deadline))
+        self.idle_release = (None if idle_release is None
+                             else float(idle_release))
+        self.max_pending_rows = (None if max_pending_rows is None
+                                 else max(int(max_pending_rows), 1))
+        self.fleet_rotate_bytes = fleet_rotate_bytes
+        self.fault_plan = fault_plan
         # durable per-host stores: journal + meta sidecar per host under
         # this directory; a restarted server restores dedup floors and
         # backfills reconnecting hosts' history from them
@@ -667,10 +877,13 @@ class IngestServer:
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind(tuple(addr))
         self._sock.listen(backlog)
-        self._sock.settimeout(0.1)
+        self._sock.setblocking(False)
         self.address: tuple[str, int] = self._sock.getsockname()[:2]
-        self._accept_thread: threading.Thread | None = None
-        self._conn_threads: list[threading.Thread] = []
+        self._loop_thread: threading.Thread | None = None
+        self._sel: selectors.BaseSelector | None = None
+        self._wake_r: socket.socket | None = None
+        self._wake_w: socket.socket | None = None
+        self._conns: set[_Conn] = set()     # loop-thread-owned
         self._conn_socks: set[socket.socket] = set()
         self._hosts: dict[str, _HostState] = {}
         self._lock = threading.Lock()
@@ -680,7 +893,8 @@ class IngestServer:
         self._stats_lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
         self._open_conns = 0
-        self._stopped = threading.Event()
+        self._stopped = threading.Event()   # stop accepting
+        self._shutdown = threading.Event()  # stop the loop entirely
         # counters
         self.connections = 0
         self.stale_chunks = 0
@@ -691,15 +905,35 @@ class IngestServer:
         self.worker_growth_rejected = 0
         self.backfilled_chunks = 0
         self.backfilled_rows = 0
+        self.deadline_closed = 0
+        self.idle_released = 0
+        self.shed_chunks = 0
+        self.shed_rows = 0
+        self.journal_errors = 0
+        self.heartbeats = 0
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "IngestServer":
-        if self._accept_thread is None:
+        if self._loop_thread is None:
             self.source.accepting = True
-            self._accept_thread = threading.Thread(
-                target=self._accept_loop, daemon=True, name="gapp-ingest")
-            self._accept_thread.start()
+            self._sel = selectors.DefaultSelector()
+            self._wake_r, self._wake_w = socket.socketpair()
+            self._wake_r.setblocking(False)
+            self._wake_w.setblocking(False)
+            self._sel.register(self._sock, selectors.EVENT_READ, "accept")
+            self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+            self._loop_thread = threading.Thread(
+                target=self._loop, daemon=True, name="gapp-ingest")
+            self._loop_thread.start()
         return self
+
+    def _wake(self) -> None:
+        w = self._wake_w
+        if w is not None:
+            try:
+                w.send(b"x")
+            except OSError:
+                pass
 
     def __enter__(self) -> "IngestServer":
         return self.start()
@@ -708,44 +942,78 @@ class IngestServer:
         self.close()
 
     def stop(self) -> None:
-        """Stop accepting; existing connections drain to EOF.  The fleet
+        """Stop accepting; existing connections keep draining.  The fleet
         chunk stream can then end once every host finished."""
         self._stopped.set()
-        if self._accept_thread is not None:
-            self._accept_thread.join(timeout=2.0)
-            self._accept_thread = None
+        self._wake()
         self.source.accepting = False
         self.source.notify()
 
     def close(self) -> None:
         self.stop()
+        self._shutdown.set()
+        self._wake()
+        t = self._loop_thread
+        if t is not None:
+            t.join(timeout=5.0)
+            self._loop_thread = None
         try:
             self._sock.close()
         except OSError:
             pass
-        # sever live connections: handlers block in 30s reads, so without
-        # this a close() would leave them (and their producers' "healthy"
-        # sockets) alive — producers must see the death and reconnect
+        # sever any socket the loop left open — ABORTIVELY (SO_LINGER 0
+        # makes close send RST, never FIN).  A graceful shutdown here
+        # would be a lie: the loop is gone and anything still buffered in
+        # these sockets (or parked unparsed in a conn's rbuf) was
+        # discarded unread, but a FIN reads as "everything before it was
+        # consumed" — it would pass the sinks' BYE delivery barrier and
+        # turn a recoverable server death into silent loss.  The RST
+        # tells producers delivery is uncertain; they reconnect and
+        # replay their unacked journal tail.
         with self._lock:
             socks = list(self._conn_socks)
         for c in socks:
             try:
-                c.shutdown(socket.SHUT_RDWR)
+                c.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                             struct.pack("ii", 1, 0))
             except OSError:
                 pass
             try:
                 c.close()
             except OSError:
                 pass
-        for t in list(self._conn_threads):
-            t.join(timeout=2.0)
+        if self._sel is not None:
+            try:
+                self._sel.close()
+            except OSError:
+                pass
+            self._sel = None
+        for w in (self._wake_r, self._wake_w):
+            if w is not None:
+                try:
+                    w.close()
+                except OSError:
+                    pass
+        self._wake_r = self._wake_w = None
         with self._lock:
             hosts = list(self._hosts.values())
         for st in hosts:        # seal the durable per-host stores
             with st.lock:
                 if st.journal is not None:
                     st.journal.close()
-                    self._write_host_meta(st)
+                    if st.journal.blocks == 0 and st.stream.rows_in == 0:
+                        # a host that handshook but never delivered a
+                        # chunk must not leak an empty journal + meta
+                        # (from_fleet_dir would replay a ghost host)
+                        for p in (st.journal.path, st.meta_path):
+                            if p:
+                                try:
+                                    os.remove(p)
+                                except OSError:
+                                    pass
+                        st.journal = None
+                    else:
+                        self._write_host_meta(st)
         self.source.notify()
 
     def finish_host(self, host_id: str) -> bool:
@@ -789,32 +1057,246 @@ class IngestServer:
                 "proto_errors": self.proto_errors,
                 "backfilled_chunks": self.backfilled_chunks,
                 "backfilled_rows": self.backfilled_rows,
+                "deadline_closed": self.deadline_closed,
+                "idle_released": self.idle_released,
+                "shed_chunks": self.shed_chunks,
+                "shed_rows": self.shed_rows,
+                "journal_errors": self.journal_errors,
+                "heartbeats": self.heartbeats,
                 "fleet_dir": self.fleet_dir,
             }
         out.update(self.source.stats())
         return out
 
-    # -- accept/connection machinery -----------------------------------------
-    def _accept_loop(self) -> None:
-        while not self._stopped.is_set():
+    # -- event loop ----------------------------------------------------------
+    def _loop(self) -> None:
+        """The selector loop: accepts, reads, frame dispatch, writes, and
+        the deadline/idle/flow-control sweep — one thread for the whole
+        fleet."""
+        listener_on = True
+        while not self._shutdown.is_set():
+            if self._stopped.is_set() and listener_on:
+                try:
+                    self._sel.unregister(self._sock)
+                except (KeyError, ValueError):
+                    pass
+                listener_on = False
             try:
-                conn, _ = self._sock.accept()
-            except socket.timeout:
-                continue
+                events = self._sel.select(0.05)
             except OSError:
                 return
-            t = threading.Thread(target=self._serve_conn, args=(conn,),
-                                 daemon=True, name="gapp-ingest-conn")
-            # prune finished handlers so a long-lived server with flaky,
-            # reconnecting producers doesn't accumulate dead Thread objects
-            self._conn_threads = [x for x in self._conn_threads
-                                  if x.is_alive()]
-            self._conn_threads.append(t)
-            with self._lock:
+            for key, mask in events:
+                data = key.data
+                if data == "accept":
+                    self._do_accept()
+                elif data == "wake":
+                    try:
+                        while self._wake_r.recv(4096):
+                            pass
+                    except (BlockingIOError, OSError):
+                        pass
+                else:
+                    conn = data
+                    if mask & selectors.EVENT_WRITE and not conn.closed:
+                        self._flush_wbuf(conn)
+                    if mask & selectors.EVENT_READ and not conn.closed:
+                        self._do_read(conn)
+            self._sweep(time.monotonic())
+
+    def _do_accept(self) -> None:
+        while True:
+            try:
+                s, _ = self._sock.accept()
+            except (BlockingIOError, InterruptedError):
+                return
+            except OSError:
+                return
+            s.setblocking(False)
+            conn = _Conn(s)
+            self._conns.add(conn)
+            self._sel.register(s, selectors.EVENT_READ, conn)
+            with self._idle:
                 self.connections += 1
                 self._open_conns += 1
-                self._conn_socks.add(conn)
-            t.start()
+                self._conn_socks.add(s)
+
+    def _do_read(self, conn: _Conn) -> None:
+        try:
+            data = conn.sock.recv(1 << 18)
+        except (BlockingIOError, InterruptedError):
+            return
+        except OSError:
+            self._close_conn(conn)
+            return
+        if not data:
+            self._close_conn(conn)      # EOF (a torn rbuf tail dies with it)
+            return
+        conn.rbuf += data
+        conn.last_rx = time.monotonic()
+        if conn.st is not None:
+            conn.st.last_activity = conn.last_rx
+        self._parse_rbuf(conn)
+
+    def _parse_rbuf(self, conn: _Conn) -> None:
+        """Dispatch every complete frame buffered on ``conn`` (until a
+        flow-control pause or an error closes it).  Also called when a
+        paused connection resumes: frames that arrived before the pause
+        must not wait for new bytes."""
+        try:
+            while not conn.closed and not conn.paused:
+                got = wire.frame_from_buffer(conn.rbuf)
+                if got is None:
+                    break
+                kind, payload, consumed = got
+                del conn.rbuf[:consumed]
+                self._dispatch(conn, kind, payload)
+        except (wire.WireError, KeyError, ValueError):
+            with self._stats_lock:
+                self.proto_errors += 1
+            self._close_conn(conn)
+        except _RefuseChunk:
+            self._close_conn(conn)
+        except OSError:
+            self._close_conn(conn)
+
+    def _dispatch(self, conn: _Conn, kind: int, payload: bytes) -> None:
+        if conn.st is None:
+            if kind != wire.HELLO:
+                raise wire.WireError("expected HELLO")
+            hello = wire.decode_hello(payload)
+            st = self._register_host(hello)
+            conn.st = st
+            st.open_conns += 1
+            st.last_activity = time.monotonic()
+            with st.lock:
+                ack, codec = st.next_seq, st.codec
+                tags_seen = len(st.tag_entries)
+                stacks_seen = len(st.stack_entries)
+            # reply stamped with the PEER's schema version: a v1 decoder
+            # rejects v2/v3-stamped frames (the extra keys are harmless)
+            self._send_conn(conn, wire.encode_welcome(
+                st.stream.index, st.epoch, st.stream.clock_offset_ns,
+                ack_seq=ack, codec=codec, tags_seen=tags_seen,
+                stacks_seen=stacks_seen,
+                version=int(hello["wire_version"])))
+            return
+        st = conn.st
+        if kind == wire.CHUNK:
+            self._on_chunk(conn, st, wire.decode_chunk(payload))
+        elif kind == wire.TAGS:
+            self._on_tags(st, wire.decode_json(payload))
+        elif kind == wire.STACKS:
+            self._on_stacks(st, wire.decode_json(payload))
+        elif kind == wire.HEARTBEAT:
+            self._on_heartbeat(st, wire.decode_json(payload))
+        elif kind == wire.BYE:
+            bye = wire.decode_json(payload)
+            with self._lock:
+                st.rows_declared = int(bye.get("rows_sent", -1))
+                st.got_bye = True
+            st.stream.finish()
+            self.source.notify()
+            self._close_conn(conn)
+        else:
+            raise wire.WireError(
+                f"unexpected {wire.KIND_NAMES.get(kind, kind)}")
+
+    def _send_conn(self, conn: _Conn, data: bytes) -> None:
+        conn.wbuf += data
+        self._flush_wbuf(conn)
+
+    def _flush_wbuf(self, conn: _Conn) -> None:
+        if conn.wbuf and not conn.closed:
+            try:
+                n = conn.sock.send(conn.wbuf)
+                del conn.wbuf[:n]
+            except (BlockingIOError, InterruptedError):
+                pass
+            except OSError:
+                self._close_conn(conn)
+                return
+        self._update_interest(conn)
+
+    def _update_interest(self, conn: _Conn) -> None:
+        if conn.closed:
+            return
+        mask = 0
+        if not conn.paused:
+            mask |= selectors.EVENT_READ
+        if conn.wbuf:
+            mask |= selectors.EVENT_WRITE
+        if mask == conn.mask:
+            return
+        try:
+            if conn.mask == 0 and mask:
+                self._sel.register(conn.sock, mask, conn)
+            elif mask == 0:
+                self._sel.unregister(conn.sock)
+            else:
+                self._sel.modify(conn.sock, mask, conn)
+        except (KeyError, ValueError, OSError):
+            self._close_conn(conn)
+            return
+        conn.mask = mask
+
+    def _close_conn(self, conn: _Conn) -> None:
+        if conn.closed:
+            return
+        conn.closed = True
+        if conn.mask:
+            try:
+                self._sel.unregister(conn.sock)
+            except (KeyError, ValueError, OSError):
+                pass
+            conn.mask = 0
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+        if conn.st is not None:
+            conn.st.open_conns -= 1
+        self._conns.discard(conn)
+        with self._idle:
+            self._open_conns -= 1
+            self._conn_socks.discard(conn.sock)
+            self._idle.notify_all()
+        self.source.notify()
+
+    def _sweep(self, now: float) -> None:
+        """Per-iteration housekeeping: read deadlines, flow-control
+        resume, idle-host watermark release."""
+        for conn in list(self._conns):
+            if conn.closed:
+                continue
+            if (self.read_deadline is not None
+                    and now - conn.last_rx > self.read_deadline):
+                # a peer that writes NOTHING for the whole deadline is
+                # dead or partitioned (v3 producers heartbeat while
+                # idle): reclaim the fd; a live peer reconnects
+                with self._stats_lock:
+                    self.deadline_closed += 1
+                self._close_conn(conn)
+                continue
+            if conn.paused and conn.st is not None \
+                    and self.max_pending_rows is not None \
+                    and (conn.st.stream.buffered_rows
+                         <= self.max_pending_rows // 2):
+                conn.paused = False      # drained below low-water: resume
+                self._parse_rbuf(conn)   # frames buffered during the pause
+                self._update_interest(conn)
+        if self.idle_release is None:
+            return
+        with self._lock:
+            hosts = list(self._hosts.values())
+        for st in hosts:
+            if st.stream.finished or st.stream.idle_exempt:
+                continue
+            if now - st.last_activity > self.idle_release:
+                with self.source.cond:
+                    st.stream.idle_exempt = True
+                    self.source.cond.notify_all()
+                with self._stats_lock:
+                    self.idle_released += 1
 
     def _register_host(self, hello: dict) -> _HostState:
         host_id = str(hello["host_id"])
@@ -852,7 +1334,10 @@ class IngestServer:
                             # rotate the durable store: the old capture's
                             # journal must not pollute the new capture
                             st.journal.close()
-                            st.journal = SpillStore(st.journal.path)
+                            st.journal = self._wrap_journal(
+                                st.stream.host_id,
+                                SpillStore(st.journal.path,
+                                           rotate_bytes=self.fleet_rotate_bytes))
                             st.tag_entries = []
                             st.stack_entries = []
                 # workers registered since the first HELLO: grow the host's
@@ -912,7 +1397,8 @@ class IngestServer:
         meta = load_json(st.meta_path)
         if (meta and instance and meta.get("instance") == instance
                 and os.path.exists(jpath)):
-            st.journal = SpillStore.open_append(jpath)
+            st.journal = SpillStore.open_append(
+                jpath, rotate_bytes=self.fleet_rotate_bytes)
             # block index == accepted seq (every accepted chunk journals
             # exactly one block; accepted seq GAPS journal empty fillers),
             # so the complete-block count IS the dedup floor — no reliance
@@ -921,7 +1407,15 @@ class IngestServer:
             self._restore_maps(st, meta)
             st.pending_backfill = st.journal.blocks > 0
         else:
-            st.journal = SpillStore(jpath)      # fresh capture: truncate
+            # fresh capture: truncate
+            st.journal = SpillStore(jpath,
+                                    rotate_bytes=self.fleet_rotate_bytes)
+        st.journal = self._wrap_journal(st.stream.host_id, st.journal)
+
+    def _wrap_journal(self, host_id: str, store):
+        if self.fault_plan is not None:
+            return self.fault_plan.wrap_journal(host_id, store)
+        return store
 
     def _restore_maps(self, st: _HostState, meta: dict) -> None:
         for i, ent in enumerate(meta.get("tags") or []):
@@ -962,66 +1456,6 @@ class IngestServer:
             "tags": st.tag_entries, "stacks": st.stack_entries,
         })
 
-    def _serve_conn(self, conn: socket.socket) -> None:
-        conn.settimeout(30.0)
-        f = conn.makefile("rwb")
-        st: _HostState | None = None
-        try:
-            frame = wire.read_frame(f)
-            if frame is None or frame[0] != wire.HELLO:
-                raise wire.WireError("expected HELLO")
-            hello = wire.decode_hello(frame[1])
-            st = self._register_host(hello)
-            with st.lock:
-                ack, codec = st.next_seq, st.codec
-                tags_seen = len(st.tag_entries)
-                stacks_seen = len(st.stack_entries)
-            # reply stamped with the PEER's schema version: a v1 decoder
-            # rejects v2-stamped frames (the extra keys are harmless)
-            f.write(wire.encode_welcome(st.stream.index, st.epoch,
-                                        st.stream.clock_offset_ns,
-                                        ack_seq=ack, codec=codec,
-                                        tags_seen=tags_seen,
-                                        stacks_seen=stacks_seen,
-                                        version=int(hello["wire_version"])))
-            f.flush()
-            while True:
-                frame = wire.read_frame(f)
-                if frame is None:
-                    break
-                kind, payload = frame
-                if kind == wire.CHUNK:
-                    self._on_chunk(st, wire.decode_chunk(payload))
-                elif kind == wire.TAGS:
-                    self._on_tags(st, wire.decode_json(payload))
-                elif kind == wire.STACKS:
-                    self._on_stacks(st, wire.decode_json(payload))
-                elif kind == wire.BYE:
-                    bye = wire.decode_json(payload)
-                    with self._lock:
-                        st.rows_declared = int(bye.get("rows_sent", -1))
-                        st.got_bye = True
-                    st.stream.finish()
-                    self.source.notify()
-                    break
-                else:
-                    raise wire.WireError(
-                        f"unexpected {wire.KIND_NAMES.get(kind, kind)}")
-        except (OSError, wire.WireError, KeyError, ValueError):
-            with self._lock:
-                self.proto_errors += 1
-        finally:
-            try:
-                f.close()
-                conn.close()
-            except OSError:
-                pass
-            with self._idle:
-                self._open_conns -= 1
-                self._conn_socks.discard(conn)
-                self._idle.notify_all()
-            self.source.notify()
-
     # -- frame handlers (serialized per host via st.lock) --------------------
     def _on_tags(self, st: _HostState, obj: dict) -> None:
         stream = st.stream
@@ -1052,7 +1486,25 @@ class IngestServer:
             if len(st.stack_entries) != st.meta_sizes[1]:
                 self._write_host_meta(st)
 
-    def _on_chunk(self, st: _HostState, chunk: wire.ChunkFrame) -> None:
+    def _on_heartbeat(self, st: _HostState, obj: dict) -> None:
+        """HEARTBEAT (wire v3): "I am alive; everything up to t_ns has
+        been sent."  Advances the host's merge watermark so an idle-but-
+        healthy producer never pins the fleet fold, and marks a host that
+        has NO data yet (``t_ns`` null) watermark-exempt — alive-but-
+        dataless must not stall the merge either (its first real chunk
+        re-arms gating)."""
+        with self._stats_lock:
+            self.heartbeats += 1
+        t_ns = obj.get("t_ns")
+        with self.source.cond:
+            if t_ns is not None:
+                st.stream.advance_watermark(int(t_ns))
+            elif st.stream.last_seen_ns is None:
+                st.stream.idle_exempt = True
+            self.source.cond.notify_all()
+
+    def _on_chunk(self, conn: _Conn, st: _HostState,
+                  chunk: wire.ChunkFrame) -> None:
         with st.lock:
             # epoch/seq check + commit + push are one atomic step: an old
             # connection's handler racing a reconnect's handler must not
@@ -1066,6 +1518,39 @@ class IngestServer:
                     self.duplicate_chunks += 1
                 return
             gap = int(chunk.seq - st.next_seq)
+            w = chunk.workers
+            bad = (w < 0) | (w >= st.stream.num_workers)
+            nbad = int(bad.sum())
+            if nbad:                   # worker registered after HELLO
+                keep = ~bad
+                cols = tuple(c[keep] for c in chunk.columns)
+            else:
+                cols = chunk.columns
+            if st.journal is not None:
+                # durable BEFORE commit/push: block index == seq is the
+                # resume-floor invariant, so every accepted seq must
+                # journal exactly one block (even an all-filtered one),
+                # and an accepted GAP journals empty filler blocks — a
+                # restarted server's floor (journal.blocks) then never
+                # re-accepts a seq it already folded.  Raw host-local
+                # columns — normalization replays at read time (backfill
+                # push / from_fleet_dir), like the live path.  The filler
+                # loop keys on the journal's ACTUAL block count, so a
+                # disk-full retry never double-appends fillers.
+                empty = [np.zeros(0, dt) for dt in wire.COL_DTYPES]
+                try:
+                    while st.journal.blocks < chunk.seq:
+                        st.journal.append_block(*empty)
+                    st.journal.append_block(*cols, sync=self.fleet_fsync)
+                except OSError:
+                    # journal full: REFUSE the chunk (close the conn
+                    # without committing) — the floor is unchanged, so
+                    # the producer's reconnect replay re-delivers it once
+                    # the disk recovers.  Accepting it un-journaled would
+                    # silently break the blocks == seq invariant.
+                    with self._stats_lock:
+                        self.journal_errors += 1
+                    raise _RefuseChunk()
             if gap:
                 # a gap means chunks committed producer-side (flush reached
                 # the kernel) never arrived — e.g. lost in a reset before
@@ -1076,31 +1561,34 @@ class IngestServer:
                 # in-flight chunk)
                 with self._stats_lock:
                     self.lost_chunks += gap
-            st.next_seq = chunk.seq + 1
-            w = chunk.workers
-            bad = (w < 0) | (w >= st.stream.num_workers)
-            if bad.any():              # worker registered after HELLO
+            if nbad:
                 with self._stats_lock:
-                    self.bad_rows += int(bad.sum())
-                keep = ~bad
-                cols = tuple(c[keep] for c in chunk.columns)
-            else:
-                cols = chunk.columns
-            if st.journal is not None:
-                # durable BEFORE the empty check: block index == seq is
-                # the resume-floor invariant, so every accepted seq must
-                # journal exactly one block (even an all-filtered one),
-                # and an accepted GAP journals empty filler blocks — a
-                # restarted server's floor (journal.blocks) then never
-                # re-accepts a seq it already folded.  Raw host-local
-                # columns — normalization replays at read time (backfill
-                # push / from_fleet_dir), like the live path.
-                empty = [np.zeros(0, dt) for dt in wire.COL_DTYPES]
-                for _ in range(gap):
-                    st.journal.append_block(*empty)
-                st.journal.append_block(*cols, sync=self.fleet_fsync)
+                    self.bad_rows += nbad
+            st.next_seq = chunk.seq + 1
             if len(cols[0]) == 0:
                 return
             with self.source.cond:
                 st.stream.push(*cols)
+                if (self.max_pending_rows is not None
+                        and st.stream.buffered_rows > self.max_pending_rows):
+                    if st.journal is not None:
+                        # overload, durable host: shed the OLDEST buffered
+                        # parts — they are journaled, so from_fleet_dir
+                        # recovers them offline; the live report counts
+                        # them as shed, never silently drops them
+                        chunks, rows = st.stream.shed_oldest(
+                            self.max_pending_rows)
+                        if chunks:
+                            self.source.shed_chunks += chunks
+                            self.source.shed_rows += rows
+                            with self._stats_lock:
+                                self.shed_chunks += chunks
+                                self.shed_rows += rows
+                    else:
+                        # no journal → shedding would LOSE data: apply
+                        # backpressure instead (stop reading this conn
+                        # until the merge drains below the low-water mark)
+                        conn.paused = True
                 self.source.cond.notify_all()
+        if conn.paused:
+            self._update_interest(conn)

@@ -96,6 +96,20 @@ Frame kinds and payloads:
                      ids, caller→callee).
     0x06   BYE       JSON — ``{"rows_sent", "chunks_sent"}`` final
                      accounting; lets the server assert losslessness.
+    0x07   HEARTBEAT JSON — ``{"t_ns"}`` (v3, additive) producer
+                     liveness: sent whenever the producer has been idle
+                     for its heartbeat interval, so the server's per-host
+                     read deadline distinguishes "alive but quiet" from
+                     "silently dead" (a dead producer's stream is retired
+                     so it cannot pin the merge watermark).  ``t_ns``
+                     (nullable) is the capture-clock time of the last
+                     event the producer has *streamed* — a safe low
+                     watermark (every future row has time >= it); the
+                     server only ever advances its per-host watermark
+                     with it.  Producers send heartbeats only to servers
+                     that advertised ``server_wire_version >= 3`` in
+                     WELCOME (an older server would count the unknown
+                     kind as a protocol error).
     ====== ========= ==================================================
 
 Round-trip guarantee: ``decode_chunk(encode_chunk(c)) == c`` bit-exact for
@@ -111,8 +125,9 @@ import zlib
 
 import numpy as np
 
-WIRE_VERSION = 2        # v2 adds FLAG_COMPRESSED + HELLO.codecs +
-#                         WELCOME.ack_seq/codec — all additive
+WIRE_VERSION = 3        # v3 adds HEARTBEAT + WELCOME.server_wire_version
+#                         (v2 added FLAG_COMPRESSED + HELLO.codecs +
+#                         WELCOME.ack_seq/codec) — all additive
 MIN_WIRE_VERSION = 1    # oldest version this decoder still accepts
 MAGIC = "gapp-fleet"
 
@@ -135,9 +150,11 @@ CHUNK = 0x03
 TAGS = 0x04
 STACKS = 0x05
 BYE = 0x06
+HEARTBEAT = 0x07
 
 KIND_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", CHUNK: "CHUNK",
-              TAGS: "TAGS", STACKS: "STACKS", BYE: "BYE"}
+              TAGS: "TAGS", STACKS: "STACKS", BYE: "BYE",
+              HEARTBEAT: "HEARTBEAT"}
 
 # merged-across-shards sentinel for the CHUNK shard_id field
 MERGED_SHARD = 0xFFFF
@@ -249,6 +266,32 @@ def _inflate(payload: bytes) -> bytes:
     return out
 
 
+def frame_from_buffer(buf) -> tuple[int, bytes, int] | None:
+    """Non-blocking twin of :func:`read_frame` for event-loop receivers:
+    parse ONE frame from the head of ``buf`` (bytes/bytearray/memoryview).
+    Returns ``(kind, payload, consumed_bytes)`` when a complete frame is
+    present, ``None`` when more bytes are needed; raises :class:`WireError`
+    on a malformed header exactly like :func:`read_frame` (the caller
+    drops the connection — there is no resync point in the stream)."""
+    if len(buf) < _FRAME_HEADER.size:
+        return None
+    kind, flags, version, length = _FRAME_HEADER.unpack_from(buf)
+    if flags & ~_KNOWN_FLAGS:
+        raise WireError(f"unknown flags 0x{flags:02x}")
+    if not MIN_WIRE_VERSION <= version <= WIRE_VERSION:
+        raise WireError(f"wire version {version} outside "
+                        f"[{MIN_WIRE_VERSION}, {WIRE_VERSION}]")
+    if length > MAX_PAYLOAD:
+        raise WireError(f"frame length {length} exceeds MAX_PAYLOAD")
+    total = _FRAME_HEADER.size + length
+    if len(buf) < total:
+        return None
+    payload = bytes(buf[_FRAME_HEADER.size:total])
+    if flags & FLAG_COMPRESSED:
+        payload = _inflate(payload)
+    return kind, payload, total
+
+
 def _read_exact(stream, n: int) -> bytes:
     """Read exactly ``n`` bytes from a file-like/socket-file stream;
     returns ``b""`` on clean EOF at a frame boundary, raises on a short
@@ -358,9 +401,21 @@ def encode_welcome(host_index: int, epoch: int, clock_offset_ns: int,
            "ack_seq": int(ack_seq),
            "codec": str(codec),
            "tags_seen": int(tags_seen),
-           "stacks_seen": int(stacks_seen)}
+           "stacks_seen": int(stacks_seen),
+           # v3, additive: OUR version (the frame header is stamped with
+           # the peer's) — a producer only sends HEARTBEAT frames to a
+           # server that declares it can decode them
+           "server_wire_version": WIRE_VERSION}
     return pack_frame(WELCOME, json.dumps(obj, separators=(",", ":"))
                       .encode("utf-8"), version=version)
+
+
+def encode_heartbeat(t_ns: int | None = None, codec: str = RAW) -> bytes:
+    """Producer liveness beacon (v3).  ``t_ns`` is the capture-clock time
+    of the last event already streamed (a safe per-host low watermark), or
+    ``None`` when the producer has streamed nothing yet."""
+    return encode_json(HEARTBEAT,
+                       {"t_ns": None if t_ns is None else int(t_ns)}, codec)
 
 
 def encode_tags(entries: list[tuple[int, str, str]],

@@ -1,0 +1,252 @@
+"""Deterministic fault injection (repro.fleet.faults.FaultPlan).
+
+Every chaos-bench failure mode is reproduced here as an ordinary unit
+test: connection drops, torn (truncated) frames, header corruption,
+connect refusal (partitions), and disk-full on either journal — each
+asserting the recovery contract from the failure-modes matrix in
+``repro/fleet/__init__.py``.
+"""
+import errno
+import io
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ProfileSession, SpillStore, detect_offline
+from repro.fleet import FaultPlan, FleetSource, IngestServer, attach_remote
+from tests.test_tracer import FakeClock
+
+
+def _wait(cond, timeout=5.0):
+    deadline = time.time() + timeout
+    while not cond() and time.time() < deadline:
+        time.sleep(0.01)
+    assert cond()
+
+
+def _stream_spans(s, w, clk, n, tag="x"):
+    for _ in range(n):
+        s.begin(w, tag)
+        clk.advance(1000)
+        s.end(w)
+        clk.advance(500)
+
+
+def _ranked(rep):
+    return [(rep.path_str(p), p.cmetric, p.slices) for p in rep.paths]
+
+
+def _assert_equals_journals(rep, fleet_dir):
+    src = FleetSource.from_fleet_dir(fleet_dir)
+    oracle = detect_offline(src.full_log(), src.tags, src.stacks, n_min=1.0)
+    np.testing.assert_array_equal(rep.per_worker, oracle.per_worker)
+    assert rep.total_slices == oracle.total_slices
+    assert _ranked(rep) == _ranked(oracle)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit semantics (no sockets)
+# ---------------------------------------------------------------------------
+
+def test_rules_fire_on_exact_frames_and_log_events():
+    plan = FaultPlan(seed=7)
+    plan.drop("h", frame=2).corrupt("h", frame=1, offset=2)
+    raw = io.BytesIO()
+    f = plan.wrap_producer("h", raw, conn=0)
+    f.write(b"frame0-ok")
+    f.write(b"frame1-corrupt-me")
+    with pytest.raises(ConnectionResetError):
+        f.write(b"frame2-dropped")
+    data = raw.getvalue()
+    assert data.startswith(b"frame0-ok")
+    # corruption flipped exactly byte 2 of frame 1, nothing else
+    orig = b"frame1-corrupt-me"
+    got = data[len(b"frame0-ok"):]
+    assert got[2] == orig[2] ^ 0xFF
+    assert got[:2] + got[3:] == orig[:2] + orig[3:]
+    assert [(h, k) for h, k, _ in plan.events] == [("h", "corrupt"),
+                                                  ("h", "drop")]
+
+
+def test_truncate_writes_prefix_then_dies():
+    plan = FaultPlan()
+    plan.truncate("h", frame=1, keep=4)
+    raw = io.BytesIO()
+    f = plan.wrap_producer("h", raw)
+    f.write(b"AAAA-first")
+    with pytest.raises(ConnectionResetError):
+        f.write(b"BBBBBBBB-second")
+    assert raw.getvalue() == b"AAAA-firstBBBB"     # torn frame on the wire
+
+
+def test_refuse_connect_budget_and_conn_indices():
+    plan = FaultPlan()
+    plan.refuse_connect("h", times=2)
+    for _ in range(2):
+        with pytest.raises(ConnectionRefusedError):
+            plan.connect("h")
+    assert plan.connect("h") == 0       # first SUCCESSFUL dial is conn 0
+    assert plan.connect("h") == 1
+    assert plan.connect("other") == 0   # per-host counters
+
+
+def test_disk_full_triggers_at_block_then_recovers(tmp_path):
+    plan = FaultPlan()
+    plan.disk_full("h", at_block=2, failures=2)
+    st = plan.wrap_journal("h", SpillStore(str(tmp_path / "j.spill")))
+    cols = (np.array([1], np.int64), np.zeros(1, np.int32),
+            np.ones(1, np.int8), np.zeros(1, np.int32),
+            np.full(1, -1, np.int32))
+    assert st.append_block(*cols) == 0
+    assert st.append_block(*cols) == 1
+    for _ in range(2):                  # budget of 2 ENOSPC failures
+        with pytest.raises(OSError) as ei:
+            st.append_block(*cols)
+        assert ei.value.errno == errno.ENOSPC
+    assert st.append_block(*cols) == 2  # disk "recovered"
+    st.close()
+
+
+def test_schedule_fires_each_threshold_once_in_order():
+    plan = FaultPlan()
+    plan.schedule("kill", [3, 5])
+    fired = [step for step in range(8) if plan.due("kill", step)]
+    assert fired == [3, 5]
+    assert not plan.due("kill", 99)     # exhausted
+
+
+def test_slow_applies_to_every_frame():
+    plan = FaultPlan()
+    plan.slow("h", per_frame=0.01)
+    f = plan.wrap_producer("h", io.BytesIO())
+    t0 = time.perf_counter()
+    for _ in range(3):
+        f.write(b"x")
+    assert time.perf_counter() - t0 >= 0.03
+
+
+# ---------------------------------------------------------------------------
+# end-to-end recovery contracts (real sockets, scripted faults)
+# ---------------------------------------------------------------------------
+
+def _run_faulted_capture(tmp_path, plan, *, rounds=6, spans=5,
+                         server_kw=None, sink_kw=None):
+    """One journaled producer streams `rounds` snapshot-bounded chunks
+    through `plan`; returns (report, server_stats, sink, fleet_dir)."""
+    fleet_dir = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=fleet_dir, **(server_kw or {}))
+    server.start()
+    fleet_sess = ProfileSession(server.source, n_min=1.0)
+    fleet_sess.start()
+    clk = FakeClock()
+    s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+    w = s.register_worker("w")
+    sink = attach_remote(s, server.address, host_id="h", clock_offset_ns=0,
+                         journal=str(tmp_path / "h.journal"),
+                         reconnect_delay=0.01, heartbeat_interval=None,
+                         fault_plan=plan, **(sink_kw or {}))
+    try:
+        for _ in range(rounds):
+            _stream_spans(s, w, clk, spans)
+            s.snapshot()                # chunk boundary: deterministic seqs
+        s.result()
+        sink.close()
+        assert server.wait_idle(10), server.stats()
+        rep = fleet_sess.result()
+        st = server.stats()
+    finally:
+        fleet_sess.stop()
+        server.close()
+    return rep, st, sink, fleet_dir
+
+
+def test_connection_drop_replays_with_zero_loss(tmp_path):
+    plan = FaultPlan()
+    plan.drop("h", frame=4, conn=0)     # mid-stream reset
+    rep, st, sink, fleet_dir = _run_faulted_capture(tmp_path, plan)
+    assert ("h", "drop") in [(h, k) for h, k, _ in plan.events]
+    assert sink.reconnects >= 1
+    assert not sink.failed, sink.last_error
+    assert st["lost_chunks"] == 0, st
+    assert st["rows_in"] == 60          # 6 rounds * 5 spans * 2 events
+    assert rep.total_slices == 30
+    _assert_equals_journals(rep, fleet_dir)
+
+
+def test_corrupt_frame_is_detected_then_replayed(tmp_path):
+    plan = FaultPlan()
+    plan.corrupt("h", frame=3, conn=0)  # schema-version byte flip
+    # the server rejects frame 3 and closes; the producer only observes
+    # the RST on a LATER write — stall one so the reset surfaces
+    # mid-stream (deterministically) instead of racing the BYE
+    plan.stall("h", frame=5, seconds=0.3, conn=0)
+    rep, st, sink, fleet_dir = _run_faulted_capture(tmp_path, plan)
+    assert ("h", "corrupt") in [(h, k) for h, k, _ in plan.events]
+    assert st["proto_errors"] >= 1, st  # detected, not folded
+    assert st["lost_chunks"] == 0, st
+    assert rep.total_slices == 30
+    _assert_equals_journals(rep, fleet_dir)
+
+
+def test_truncated_frame_torn_on_wire_then_replayed(tmp_path):
+    plan = FaultPlan()
+    plan.truncate("h", frame=4, keep=6, conn=0)
+    rep, st, sink, fleet_dir = _run_faulted_capture(tmp_path, plan)
+    assert ("h", "truncate") in [(h, k) for h, k, _ in plan.events]
+    assert st["lost_chunks"] == 0, st
+    assert st["duplicate_chunks"] == 0, st
+    assert rep.total_slices == 30
+    _assert_equals_journals(rep, fleet_dir)
+
+
+def test_partition_drop_then_refuse_recovers(tmp_path):
+    plan = FaultPlan()
+    plan.drop("h", frame=5, conn=0)
+    plan.refuse_connect("h", times=3)   # bounded partition
+    rep, st, sink, fleet_dir = _run_faulted_capture(
+        tmp_path, plan,
+        sink_kw=dict(backoff_max=0.05, backoff_seed=1, max_reconnects=64))
+    refusals = sum(1 for _, k, _ in plan.events if k == "refuse")
+    assert refusals == 3
+    assert not sink.failed
+    assert st["lost_chunks"] == 0, st
+    assert rep.total_slices == 30
+    _assert_equals_journals(rep, fleet_dir)
+
+
+def test_producer_disk_full_sheds_chunk_whole(tmp_path):
+    """Producer journal ENOSPC: the chunk is dropped BEFORE it consumes a
+    seq — visible as journal_errors/dropped_chunks, absent from BOTH the
+    live fold and the journals, so union equality still holds."""
+    plan = FaultPlan()
+    plan.disk_full("h", at_block=2, failures=1)
+    rep, st, sink, fleet_dir = _run_faulted_capture(tmp_path, plan)
+    assert sink.journal_errors == 1
+    assert sink.dropped_chunks == 1
+    assert not sink.failed
+    assert st["lost_chunks"] == 0, st       # dropped != lost: no seq gap
+    assert st["rows_in"] == 50              # one 10-row chunk shed
+    assert rep.total_slices == 25
+    _assert_equals_journals(rep, fleet_dir)
+
+
+def test_server_disk_full_refuses_chunk_and_replay_recovers(tmp_path):
+    """Server journal ENOSPC: the chunk is REFUSED (no commit, connection
+    closed); once the disk recovers the reconnect replay re-delivers it —
+    recovered, not lost."""
+    plan = FaultPlan()
+    # the refusal closes the connection server-side; stall a later frame
+    # so the producer observes the reset mid-stream and replays
+    plan.stall("h", frame=6, seconds=0.3, conn=0)
+    server_plan = FaultPlan()
+    server_plan.disk_full("h", at_block=2, failures=1)
+    rep, st, sink, fleet_dir = _run_faulted_capture(
+        tmp_path, plan, server_kw=dict(fault_plan=server_plan))
+    assert ("h", "disk_full") in [(h, k) for h, k, _ in server_plan.events]
+    assert st["journal_errors"] == 1, st
+    assert st["lost_chunks"] == 0, st
+    assert st["duplicate_chunks"] == 0, st
+    assert st["rows_in"] == 60              # everything arrived in the end
+    assert rep.total_slices == 30
+    _assert_equals_journals(rep, fleet_dir)

@@ -74,7 +74,35 @@ def test_hello_welcome_roundtrip():
     w = wire.decode_json(payload)
     assert w == {"host_index": 2, "epoch": 1, "clock_offset_ns": -50,
                  "ack_seq": 7, "codec": "zlib", "tags_seen": 3,
-                 "stacks_seen": 0}
+                 "stacks_seen": 0, "server_wire_version": wire.WIRE_VERSION}
+
+
+def test_heartbeat_roundtrip():
+    kind, payload = _roundtrip(wire.encode_heartbeat(12345))
+    assert kind == wire.HEARTBEAT
+    assert wire.decode_json(payload) == {"t_ns": 12345}
+    # a producer with no data yet beacons a null watermark
+    kind, payload = _roundtrip(wire.encode_heartbeat(None, codec=wire.ZLIB))
+    assert kind == wire.HEARTBEAT
+    assert wire.decode_json(payload) == {"t_ns": None}
+
+
+def test_frame_from_buffer_incremental():
+    """The event-loop parser: byte-at-a-time feeding yields exactly the
+    frames read_frame would, at exact boundaries."""
+    raw = wire.encode_bye(1, 1) + wire.encode_heartbeat(7)
+    buf = bytearray()
+    got = []
+    for b in raw:
+        buf.append(b)
+        r = wire.frame_from_buffer(buf)
+        if r is not None:
+            kind, payload, consumed = r
+            del buf[:consumed]
+            got.append((kind, wire.decode_json(payload)))
+    assert not buf
+    assert got == [(wire.BYE, {"rows_sent": 1, "chunks_sent": 1}),
+                   (wire.HEARTBEAT, {"t_ns": 7})]
 
 
 def test_registry_sync_roundtrip():

@@ -1,0 +1,145 @@
+"""SpillStore journal rotation + retention.
+
+Invariants under test: block indices are GLOBAL across rotated segments
+(block index == append order == chunk seq forever), readers span sealed
+segments + the active file transparently, and retention never prunes a
+block above the ack floor — a rotated capture replays bit-equal to an
+unrotated one.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import SpillStore
+from repro.fleet import wire
+
+
+def _block(t0, n=10):
+    times = np.arange(t0, t0 + n, dtype=np.int64)
+    workers = np.zeros(n, np.int32)
+    deltas = np.ones(n, np.int8)
+    tags = np.zeros(n, np.int32)
+    stacks = np.full(n, -1, np.int32)
+    return times, workers, deltas, tags, stacks
+
+
+def _append_blocks(st, count, start=0, n=10):
+    idxs = []
+    for i in range(count):
+        idxs.append(st.append_block(*_block((start + i) * 1000, n)))
+    return idxs
+
+
+def test_rotation_rolls_segments_and_keeps_global_indices(tmp_path):
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_bytes=1)   # roll after every block
+    idxs = _append_blocks(st, 10)
+    assert idxs == list(range(10))          # global, monotonic
+    assert st.blocks == 10
+    assert st.segments >= 3
+    st.close()
+    segs = [f for f in os.listdir(tmp_path) if f.endswith(".seg")]
+    assert len(segs) >= 3
+
+
+def test_reader_spans_segments_bit_equal(tmp_path):
+    plain = str(tmp_path / "plain.spill")
+    rotated = str(tmp_path / "rot.spill")
+    a, b = SpillStore(plain), SpillStore(rotated, rotate_bytes=1)
+    for st in (a, b):
+        _append_blocks(st, 8)
+        st.close()
+    la = SpillStore.open_readonly(plain).freeze(1)
+    lb = SpillStore.open_readonly(rotated).freeze(1)
+    np.testing.assert_array_equal(la.times, lb.times)
+    np.testing.assert_array_equal(la.workers, lb.workers)
+    np.testing.assert_array_equal(la.deltas, lb.deltas)
+
+
+def test_iter_blocks_skip_is_global(tmp_path):
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_bytes=1)
+    _append_blocks(st, 10)
+    st.close()
+    ro = SpillStore.open_readonly(path)
+    got = list(ro.iter_block_columns(skip=7))
+    assert len(got) == 3
+    assert got[0][0][0] == 7000     # first time of block 7
+
+
+def test_open_append_resumes_global_numbering(tmp_path):
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_bytes=1)
+    _append_blocks(st, 5)
+    st.close()
+    st = SpillStore.open_append(path, rotate_bytes=1)
+    assert st.blocks == 5
+    assert st.append_block(*_block(5000)) == 5
+    st.close()
+    ro = SpillStore.open_readonly(path)
+    assert ro.blocks == 6
+
+
+def test_retention_never_prunes_unacked(tmp_path):
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_bytes=1, retain_blocks=1)
+    _append_blocks(st, 10)
+    # no ack floor yet: retention must hold EVERY block
+    assert st.first_block == 0
+    assert list(st.iter_block_columns())    # all readable
+    st.set_ack_floor(10)
+    assert st.first_block >= 8              # now pruning may proceed
+    assert st.blocks == 10                  # indices still global
+    st.close()
+
+
+def test_ack_floor_prunes_whole_segments_only(tmp_path):
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_bytes=1)   # retain_blocks=None: keep all
+    _append_blocks(st, 10)
+    st.set_ack_floor(7)
+    assert st.first_block == 0              # no retention policy: no prune
+    st.close()
+    st = SpillStore.open_append(path, rotate_bytes=1, retain_blocks=2)
+    st.set_ack_floor(8)
+    assert 0 < st.first_block <= 8          # pruned leading segments, never
+    #                                         past min(ack, blocks - retain)
+    # the retained tail is still readable from its global offset
+    kept = list(st.iter_block_columns(skip=st.first_block))
+    assert kept[0][0][0] == st.first_block * 1000
+    st.close()
+
+
+def test_replay_tail_after_prune_matches(tmp_path):
+    """The fleet-replay contract: after pruning below the ack floor, every
+    block >= floor replays exactly (the unacked tail a reconnect needs)."""
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_bytes=1, retain_blocks=3)
+    _append_blocks(st, 12)
+    st.set_ack_floor(9)
+    for i, cols in enumerate(st.iter_block_columns(skip=9)):
+        assert cols[0][0] == (9 + i) * 1000
+    st.close()
+
+
+def test_rotate_age_seals_old_segment(tmp_path):
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path, rotate_age_s=0.0)     # every append is "old"
+    _append_blocks(st, 3)
+    assert st.segments >= 2
+    assert st.blocks == 3
+    st.close()
+    ro = SpillStore.open_readonly(path)
+    assert ro.blocks == 3
+    assert [c[0][0] for c in ro.iter_block_columns()] == [0, 1000, 2000]
+
+
+def test_unrotated_store_unchanged(tmp_path):
+    """Default path: no rotation kwargs → single file, no .seg clutter."""
+    path = str(tmp_path / "j.spill")
+    st = SpillStore(path)
+    _append_blocks(st, 6)
+    assert st.segments == 0
+    st.close()
+    assert [f for f in os.listdir(tmp_path)] == ["j.spill"]
