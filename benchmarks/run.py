@@ -47,7 +47,7 @@ def smoke_probe(pairs: int, threads: int, out: str) -> dict:
     res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
     with open(out, "w") as f:
         json.dump(res, f, indent=2)
-    print(f"# probe hot path: locked "
+    print("# probe hot path: locked "
           f"{res['locked_us_per_event_1t']:.2f}us/ev 1t "
           f"/ {res['locked_us_per_event_mt']:.2f}us/ev {threads}t, sharded "
           f"{res['sharded_us_per_event_1t']:.2f}us/ev 1t "

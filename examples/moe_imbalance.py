@@ -12,7 +12,6 @@ Run:  PYTHONPATH=src python examples/moe_imbalance.py
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs

@@ -9,7 +9,6 @@ analytic bubble formula (n_stages-1)/(n_micro+n_stages-1).
 
 Run:  PYTHONPATH=src python examples/pipeline_bubbles.py
 """
-import numpy as np
 
 from repro.core import ProfileSession, imbalance_stats
 from repro.pipeline.gpipe import schedule_intervals

@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/straggler_hunt.py
 """
 import numpy as np
 
-from repro.core import render_text
 from repro.ft.monitor import StragglerMonitor
 
 

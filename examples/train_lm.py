@@ -11,7 +11,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--dmodel 768]
 --dmodel 256 for a quick pass on a small CPU.)
 """
 import argparse
-import time
 
 import jax
 

@@ -117,7 +117,6 @@ def restore(directory: str, step: int, like_tree, shardings=None):
 def prune(directory: str, keep: int = 3) -> None:
     if not os.path.isdir(directory):
         return
-    steps = sorted(s for s in (latest_step(directory),) if s is not None)
     all_steps = sorted(int(n.split("_")[1]) for n in os.listdir(directory)
                        if n.startswith("step_") and not n.endswith(".tmp"))
     for s in all_steps[:-keep]:

@@ -31,7 +31,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import backends as backends_lib
-from repro.core.events import EventLog, NO_STACK, NO_TAG
+from repro.core.events import EventLog
 from repro.core.sampler import SampleBuffer, simulate_samples
 from repro.core.slices import CriticalSlice, SliceTable
 from repro.core.tracer import StackRegistry, TagRegistry, Tracer

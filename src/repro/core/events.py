@@ -209,13 +209,13 @@ class EventRing:
 
     def __init__(self, capacity: int = 1 << 20):
         self.capacity = int(capacity)
-        self.times = np.zeros(self.capacity, np.int64)
-        self.workers = np.zeros(self.capacity, np.int32)
-        self.deltas = np.zeros(self.capacity, np.int8)
-        self.tags = np.full(self.capacity, NO_TAG, np.int32)
-        self.stacks = np.full(self.capacity, NO_STACK, np.int32)
-        self.head = 0
-        self.dropped = 0
+        self.times = np.zeros(self.capacity, np.int64)      # guarded-by: self._lock
+        self.workers = np.zeros(self.capacity, np.int32)    # guarded-by: self._lock
+        self.deltas = np.zeros(self.capacity, np.int8)      # guarded-by: self._lock
+        self.tags = np.full(self.capacity, NO_TAG, np.int32)      # guarded-by: self._lock
+        self.stacks = np.full(self.capacity, NO_STACK, np.int32)  # guarded-by: self._lock
+        self.head = 0                                       # guarded-by: self._lock
+        self.dropped = 0                                    # guarded-by: self._lock
         self._lock = threading.Lock()
 
     def append(self, t: int, worker: int, delta: int, tag: int = NO_TAG,
@@ -232,7 +232,7 @@ class EventRing:
             self.deltas[i] = delta
             self.tags[i] = tag
             self.stacks[i] = stack
-            self.head = i + 1
+            self.head = i + 1  # publishes: self.times, self.workers, self.deltas, self.tags, self.stacks
 
     def freeze(self, num_workers: int) -> EventLog:
         with self._lock:

@@ -119,7 +119,7 @@ def _export_text(rep, *, session=None, **kw) -> str:
             # stream — say so right next to the numbers it skews
             out += ("\ncapture health: DEGRADED — "
                     f"{shed} chunk(s) shed under overload "
-                    f"(recoverable from fleet journals), "
+                    "(recoverable from fleet journals), "
                     f"{lost} chunk(s) lost in transit, "
                     f"{idle} idle host(s) released from the watermark\n")
     return out

@@ -28,7 +28,7 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
                  f"(CR {100.0 * rep.critical_ratio:.2f}%)")
     ct = rep.critical_table
     if ct is not None and len(ct):
-        lines.append(f"  critical av par  : "
+        lines.append("  critical av par  : "
                      f"{float(np.mean(ct.threads_av)):10.2f} "
                      f"(mean over {len(ct)} slices)")
     lines.append("=" * 72)

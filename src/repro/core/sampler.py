@@ -21,7 +21,6 @@ global lock here, serializing the sampler against every begin/end).
 from __future__ import annotations
 
 import threading
-import time
 
 import numpy as np
 

@@ -66,7 +66,6 @@ import threading
 import time
 from typing import Callable, Iterator
 
-import numpy as np
 
 from repro.core import backends as backends_lib
 from repro.core import detector as detector_lib
@@ -194,7 +193,7 @@ class _Watch:
     callback: Callable
     every: float
     top_n: int | None
-    next_due: float = 0.0
+    next_due: float = 0.0    # guarded-by: ProfileSession._watch_lock
 
 
 # ---------------------------------------------------------------------------
@@ -238,7 +237,7 @@ class ProfileSession:
         self.chunk_events = chunk_events
         self.drain_interval = drain_interval
         self._n_min = n_min
-        self._watchers: list[_Watch] = []
+        self._watchers: list[_Watch] = []    # guarded-by: self._watch_lock
         self._watch_lock = threading.Lock()
         self.watch_errors: list[Exception] = []
         self._worker: threading.Thread | None = None
@@ -255,11 +254,11 @@ class ProfileSession:
             self.tracer = None
             self.probe = None
             self._folded = 0
-            self._sanitize_dropped = 0
+            self._sanitize_dropped = 0           # guarded-by: self._fold_lock
             self._sample_dt_ns = sample_dt_ns
             self._samples = samples
-            self._carry = FoldCarry.init(source.num_workers)
-            self._crit = CriticalBuffer()
+            self._carry = FoldCarry.init(source.num_workers)   # guarded-by: self._fold_lock
+            self._crit = CriticalBuffer()        # guarded-by: self._fold_lock
             self._fold_lock = threading.Lock()
             self._chunk_iter: Iterator[EventLog] | None = None
             self._done = threading.Event()
@@ -468,11 +467,16 @@ class ProfileSession:
         return unsubscribe
 
     def _fire_watchers(self, force: bool = False) -> None:
+        now = time.monotonic()
         with self._watch_lock:
             due = [w for w in self._watchers
-                   if force or time.monotonic() >= w.next_due]
+                   if force or now >= w.next_due]
+            for w in due:
+                # rescheduling inside the lock is the claim: a concurrent
+                # _fire_watchers (drain loop vs. forced close) can no
+                # longer select the same watcher and double-fire it
+                w.next_due = now + w.every
         for w in due:
-            w.next_due = time.monotonic() + w.every
             try:
                 w.callback(self.snapshot(w.top_n))
             except Exception as e:          # noqa: BLE001 — user callback

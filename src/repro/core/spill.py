@@ -99,20 +99,20 @@ class SpillStore:
         self.rotate_age_s = rotate_age_s
         self.retain_blocks = retain_blocks
         self._buf = [np.zeros(self.chunk_events, dt) for dt in _COL_DTYPES]
-        self._buf_len = 0
-        self._rows_on_disk = 0
+        self._buf_len = 0           # guarded-by: self._lock
+        self._rows_on_disk = 0      # guarded-by: self._lock
         # sealed segments, oldest first: [path, first_block, nblocks, nrows]
-        self._segments: list[list] = []
-        self._active_first = 0      # global index of the active file's block 0
-        self._active_rows = 0
-        self._active_opened = time.monotonic()
-        self._ack_floor = 0
-        self.pruned_blocks = 0      # blocks dropped by retention (exact)
-        self._blocks = 0            # complete blocks in the ACTIVE file
-        self._bytes_written = 0     # complete bytes in the ACTIVE file
-        self._file = None           # lazily opened write handle
-        self._closed = _readonly
-        self.max_resident_rows = 0  # high-water mark of the RAM buffer
+        self._segments: list[list] = []     # guarded-by: self._lock
+        self._active_first = 0      # guarded-by: self._lock -- global index of the active file's block 0
+        self._active_rows = 0       # guarded-by: self._lock
+        self._active_opened = time.monotonic()  # guarded-by: self._lock
+        self._ack_floor = 0         # guarded-by: self._lock
+        self.pruned_blocks = 0      # guarded-by: self._lock -- blocks dropped by retention (exact)
+        self._blocks = 0            # guarded-by: self._lock -- complete blocks in the ACTIVE file
+        self._bytes_written = 0     # guarded-by: self._lock -- complete bytes in the ACTIVE file
+        self._file = None           # guarded-by: self._lock -- lazily opened write handle
+        self._closed = _readonly    # guarded-by: self._lock
+        self.max_resident_rows = 0  # guarded-by: self._lock -- high-water mark of the RAM buffer
         self._lock = threading.Lock()
         if _readonly:
             self._scan_existing()
@@ -200,6 +200,7 @@ class SpillStore:
                 nbytes += _HEADER.size + n * _ROW_BYTES
         return blocks, rows, nbytes
 
+    # lint: disable=guarded-by(construction-time: called from __init__ only, before the store is shared with any other thread)
     def _scan_existing(self) -> None:
         """Index an existing capture: sealed rotation segments first (their
         filenames carry the global first-block index), then the active
@@ -217,7 +218,7 @@ class SpillStore:
         self._bytes_written = nbytes
 
     # -- write side ----------------------------------------------------------
-    def _write_cols(self, cols, n: int) -> None:
+    def _write_cols(self, cols, n: int) -> None:  # guarded-by: self._lock
         """Frame ``n`` rows of ``cols`` as one block (caller holds the
         lock).  Failure-atomic: if the write raises mid-frame (disk full),
         the partial frame is truncated away so the file still ends on a
@@ -249,7 +250,7 @@ class SpillStore:
         self._blocks += 1
         self._bytes_written += _HEADER.size + n * _ROW_BYTES
 
-    def _write_block(self, n: int) -> None:
+    def _write_block(self, n: int) -> None:  # guarded-by: self._lock
         """Flush the first ``n`` buffered rows as one framed block."""
         if n == 0:
             return
@@ -286,7 +287,7 @@ class SpillStore:
             self._maybe_roll_locked()
             return idx
 
-    def _maybe_roll_locked(self) -> None:
+    def _maybe_roll_locked(self) -> None:  # guarded-by: self._lock
         """Seal the active file into a ``.g<first_block>.seg`` segment when
         it exceeds the size/age threshold (caller holds the lock).  The
         seal fsyncs before the rename, so a sealed segment is always a
@@ -326,7 +327,7 @@ class SpillStore:
                 self._ack_floor = int(seq)
             self._prune_locked()
 
-    def _prune_locked(self) -> None:
+    def _prune_locked(self) -> None:  # guarded-by: self._lock
         """Delete whole sealed segments that fall entirely below BOTH the
         ack floor and the retention horizon (``blocks - retain_blocks``).
         Never touches the active file, never splits a segment, and with

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import json
 
-import numpy as np
 
 from repro.core.events import EventLog
 from repro.core.tracer import Tracer

@@ -74,9 +74,9 @@ class TagRegistry:
     """tag string -> dense id, with code location (the addr2line analogue)."""
 
     def __init__(self):
-        self._ids: dict[str, int] = {}
-        self.names: list[str] = []
-        self.locations: list[str] = []
+        self._ids: dict[str, int] = {}      # guarded-by: self._lock
+        self.names: list[str] = []          # guarded-by: self._lock
+        self.locations: list[str] = []      # guarded-by: self._lock
         self._lock = threading.Lock()
 
     def intern(self, tag: str, location: str | None = None) -> int:
@@ -101,8 +101,8 @@ class StackRegistry:
 
     def __init__(self, top_m: int = 8):
         self.top_m = top_m
-        self._ids: dict[tuple, int] = {}
-        self.paths: list[tuple] = []
+        self._ids: dict[tuple, int] = {}    # guarded-by: self._lock
+        self.paths: list[tuple] = []        # guarded-by: self._lock
         self._lock = threading.Lock()
 
     def intern(self, stack: tuple) -> int:
@@ -194,24 +194,24 @@ class Tracer:
         self.tags = TagRegistry()
         self.stacks = StackRegistry(top_m)
         self.ring = ShardedEventRing(capacity)
-        self.workers: list[WorkerInfo] = []
-        self._handles: list[WorkerHandle] = []
+        self.workers: list[WorkerInfo] = []       # guarded-by: self._reg_lock
+        self._handles: list[WorkerHandle] = []    # guarded-by: self._reg_lock
         # Table-1 eBPF-map state lives in the fold carry; it advances only
         # at flush time, by replaying drained batches through fold_chunk.
         from repro.core.cmetric import FoldCarry  # deferred: import cycle
-        self._carry = FoldCarry.init(0)
+        self._carry = FoldCarry.init(0)           # guarded-by: self._fold_lock
         self._store = store if store is not None else EventStore()
         # extra chunk consumers (e.g. repro.fleet's RemoteSink): every
         # drained+folded chunk is forwarded right after it lands in the
         # store, same columns, same order
         self.sinks: list = []
         self._critical = CriticalBuffer()
-        self._total_slices = 0
+        self._total_slices = 0                    # guarded-by: self._fold_lock
         self.on_drain: list = []    # fn(folded_events), under the fold lock
         # events removed by the §3.2 tolerance filter at flush time (e.g.
         # the orphaned end of a span whose begin was ring-dropped): the full
         # accounting is appended == len(freeze()) + ring.dropped + this
-        self.tolerance_dropped = 0
+        self.tolerance_dropped = 0                # guarded-by: self._fold_lock
         self._fold_lock = threading.Lock()     # flush/drain consumer lock
         # reader-priority hint: while a snapshot() waits on the fold lock,
         # the drain loop and the producers' opportunistic autoflushes back
@@ -259,7 +259,7 @@ class Tracer:
             if dlen(md) >= cap and not slow(shard):
                 return tid
             ta(clock())
-            ma(tid)                       # int meta == ACTIVATE
+            ma(tid)  # publishes: ta -- int meta == ACTIVATE
             return tid
 
         def end():
@@ -269,7 +269,7 @@ class Tracer:
             if dlen(md) >= cap and not slow(shard):
                 return
             ta(clock())
-            ma(s)                         # cons/None meta == DEACTIVATE
+            ma(s)  # publishes: ta -- cons/None meta == DEACTIVATE
 
         return begin, end
 
@@ -297,6 +297,7 @@ class Tracer:
             try:
                 # respect the decode budget: freeing one budget's worth of
                 # rows is enough to admit the event without a long stall
+                # lint: disable=guarded-by(fold lock IS held here — taken via the non-blocking acquire(False) two lines up, which the lexical pass cannot see)
                 self._flush_locked(self.max_rows_per_sync)
             finally:
                 self._fold_lock.release()
@@ -341,7 +342,7 @@ class Tracer:
             self._flush_locked(self.max_rows_per_sync)
         return self.ring.pending()
 
-    def _flush_locked(self, limit: int | None = None) -> int:
+    def _flush_locked(self, limit: int | None = None) -> int:  # guarded-by: self._fold_lock
         chunk = self.ring.drain(limit)
         # total_count *after* the drain: a worker that registered while we
         # drained may already have events in the chunk, and every map below
@@ -470,7 +471,7 @@ class Tracer:
             h.stack = (tid, h.stack)
             if has_room:
                 sh.times.append(int(t))
-                sh.metas.append(tid)
+                sh.metas.append(tid)   # publishes: sh.times
         else:
             if stack:
                 cons = None
@@ -480,7 +481,7 @@ class Tracer:
                 cons = h.stack
             if has_room:
                 sh.times.append(int(t))
-                sh.metas.append(cons)
+                sh.metas.append(cons)  # publishes: sh.times
             s = h.stack
             if s is not None:
                 h.stack = s[1]
@@ -503,7 +504,7 @@ class Tracer:
         finally:
             self._reader_waiting = False
 
-    def _snapshot_locked(self, budgeted: bool) -> dict:
+    def _snapshot_locked(self, budgeted: bool) -> dict:  # guarded-by: self._fold_lock
         self._flush_locked(self.max_rows_per_sync if budgeted else None)
         carry = self._carry
         return {
@@ -589,18 +590,18 @@ class LockedTracer:
         self.tags = TagRegistry()
         self.stacks = StackRegistry(top_m)
         self.ring = EventRing(capacity)
-        self.workers: list[WorkerInfo] = []
-        self._tag_stacks: dict[int, list[int]] = {}
-        self._open: set[int] = set()
-        self.global_cm = 0.0
-        self.local_cm: dict[int, float] = {}
-        self.slice_start: dict[int, int] = {}
-        self.thread_count = 0
-        self.cm_hash: dict[int, float] = {}
-        self.idle_time = 0.0
-        self.t_switch: int | None = None
-        self.t_first: int | None = None
-        self.critical = CriticalBuffer()
+        self.workers: list[WorkerInfo] = []       # guarded-by: self._lock
+        self._tag_stacks: dict[int, list[int]] = {}   # guarded-by: self._lock
+        self._open: set[int] = set()              # guarded-by: self._lock
+        self.global_cm = 0.0                      # guarded-by: self._lock
+        self.local_cm: dict[int, float] = {}      # guarded-by: self._lock
+        self.slice_start: dict[int, int] = {}     # guarded-by: self._lock
+        self.thread_count = 0                     # guarded-by: self._lock
+        self.cm_hash: dict[int, float] = {}       # guarded-by: self._lock
+        self.idle_time = 0.0                      # guarded-by: self._lock
+        self.t_switch: int | None = None          # guarded-by: self._lock
+        self.t_first: int | None = None           # guarded-by: self._lock
+        self.critical = CriticalBuffer()          # guarded-by: self._lock
         self._lock = threading.Lock()
         self.enabled = True
 
@@ -621,7 +622,8 @@ class LockedTracer:
         return self.n_min if self.n_min is not None else self.total_count / 2
 
     # the seed sched_switch probe body (call with self._lock held)
-    def _event(self, t: int, wid: int, delta: int, tag: int, stack: int) -> None:
+    def _event(self, t: int, wid: int, delta: int,  # guarded-by: self._lock
+               tag: int, stack: int) -> None:
         if self.t_first is None:
             self.t_first = t
         dt = (t - self.t_switch) * 1e-9 if self.t_switch is not None else 0.0

@@ -20,7 +20,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 
-import numpy as np
 
 from repro.core.detector import BottleneckReport
 from repro.core.events import EventLog

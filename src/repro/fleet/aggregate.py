@@ -153,8 +153,8 @@ class HostStream:
         self.finished = False
         self.rows_in = 0
         self.chunks_in = 0
-        self._parts: deque[tuple] = deque()
-        self._buffered = 0
+        self._parts: deque[tuple] = deque()     # guarded-by: FleetSource.cond
+        self._buffered = 0                      # guarded-by: FleetSource.cond
         # low watermark: every future row of this host has time >= this
         # (per-host streams are time-ordered — the tracer store order)
         self.last_seen_ns: int | None = None
@@ -165,7 +165,7 @@ class HostStream:
         self.idle_exempt = False
 
     # -- intake --------------------------------------------------------------
-    def push(self, times, workers, deltas, tags, stacks) -> int:
+    def push(self, times, workers, deltas, tags, stacks) -> int:  # guarded-by: FleetSource.cond
         """Normalize one raw chunk into the fleet domain and buffer it.
         Returns the number of rows buffered."""
         n = len(times)
@@ -185,7 +185,7 @@ class HostStream:
         self.idle_exempt = False        # data re-arms the watermark
         return n
 
-    def advance_watermark(self, t_ns: int) -> None:
+    def advance_watermark(self, t_ns: int) -> None:  # guarded-by: FleetSource.cond
         """Raise the low watermark WITHOUT data (HEARTBEAT): the producer
         asserts every row it will ever stream after this has capture time
         >= ``t_ns`` (its store order guarantees it — t_ns is the last
@@ -195,7 +195,7 @@ class HostStream:
         if self.last_seen_ns is None or t > self.last_seen_ns:
             self.last_seen_ns = t
 
-    def shed_oldest(self, max_rows: int) -> tuple[int, int]:
+    def shed_oldest(self, max_rows: int) -> tuple[int, int]:  # guarded-by: FleetSource.cond
         """Load shedding: front-evict whole buffered chunks, oldest
         first, until at most ``max_rows`` rows remain buffered.  Returns
         ``(chunks, rows)`` evicted.  The stream stays time-ordered and
@@ -211,10 +211,10 @@ class HostStream:
             rows += n
         return chunks, rows
 
-    def finish(self) -> None:
+    def finish(self) -> None:  # guarded-by: FleetSource.cond
         self.finished = True
 
-    def pull(self) -> bool:
+    def pull(self) -> bool:  # guarded-by: FleetSource.cond
         """File path: pull one raw chunk from ``feed`` into the buffer.
         Returns False (and marks the stream finished) at EOF."""
         if self.feed is None:
@@ -233,7 +233,7 @@ class HostStream:
     def buffered_rows(self) -> int:
         return self._buffered
 
-    def take_below(self, t_ns: int | None) -> list[tuple]:
+    def take_below(self, t_ns: int | None) -> list[tuple]:  # guarded-by: FleetSource.cond
         """Pop buffered rows with time strictly below ``t_ns`` (all rows
         when ``t_ns`` is None), preserving stream order."""
         out = []
@@ -290,17 +290,17 @@ class FleetSource(EventSource):
         self.tags = tags if tags is not None else TagRegistry()
         self.stacks = stacks if stacks is not None else StackRegistry()
         self.chunk_events = max(int(chunk_events), 1)
-        self.hosts: list[HostStream] = []
+        self.hosts: list[HostStream] = []       # guarded-by: self.cond
         self.cond = threading.Condition()
         self.clock_clamped = 0
         # exact load-shedding ledger (incremented by the transport under
         # self.cond): shed chunks were journaled first, so they are
         # recoverable offline — the live report is approximate by exactly
         # this much
-        self.shed_chunks = 0
-        self.shed_rows = 0
+        self.shed_chunks = 0                    # guarded-by: self.cond
+        self.shed_rows = 0                      # guarded-by: self.cond
         self._t_emitted: int | None = None
-        self._stop = False
+        self._stop = False                      # guarded-by: self.cond
         # a live transport (IngestServer) sets this while it can still
         # accept producers: the chunk stream then stays open even when
         # every current host finished (file mode leaves it False, so the
@@ -545,13 +545,13 @@ class FleetSource(EventSource):
                     if not self._stop and not self._progress_possible():
                         self.cond.wait(0.05)
 
-    def _progress_possible(self) -> bool:
+    def _progress_possible(self) -> bool:  # guarded-by: self.cond
         """Under the lock: can the next gather round move without waiting
         for a live push?  (Any unfinished file host can always pull.)"""
         return any(h.feed is not None and not h.finished
                    for h in self.hosts)
 
-    def _gather_locked(self) -> tuple[list[tuple] | None, bool]:
+    def _gather_locked(self) -> tuple[list[tuple] | None, bool]:  # guarded-by: self.cond
         """One merge round under the lock.  Returns ``(parts, done)``:
         ``parts`` is the host-ordered list of safe column tuples (None when
         nothing could be emitted), ``done`` means the stream is over."""

@@ -149,14 +149,14 @@ class RemoteSink:
         self.codecs = tuple(codecs)
         self.codec = wire.RAW       # negotiated per connection (WELCOME)
         self.ack_seq: int | None = None     # server floor, last WELCOME
-        self._q: deque = deque()
+        self._q: deque = deque()    # guarded-by: self._lock
         self._q_cap = max(int(max_buffer_chunks), 1)
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)
         self._not_empty = threading.Condition(self._lock)
         self._drained = threading.Condition(self._lock)
-        self._pending = 0           # chunks enqueued or in-flight
-        self._closing = False
+        self._pending = 0           # guarded-by: self._lock
+        self._closing = False       # guarded-by: self._lock
         self._thread: threading.Thread | None = None
         self.host_index: int | None = None
         self.epoch: int | None = None
@@ -164,7 +164,8 @@ class RemoteSink:
         self._last_sent_t: int | None = None    # capture time, last row sent
         self._cur_sock: socket.socket | None = None
         self._abort = False
-        self._next_seq = 0          # chunk sequence, NOT reset on reconnect:
+        self._next_seq = 0          # guarded-by: self._lock
+        #                             chunk sequence, NOT reset on reconnect:
         #                             the server dedups retransmits by it
         self.instance = uuid.uuid4().hex    # capture nonce (see wire HELLO)
         self._tags_sent = 0
@@ -173,7 +174,7 @@ class RemoteSink:
         # counters
         self.rows_sent = 0
         self.chunks_sent = 0
-        self.dropped_chunks = 0
+        self.dropped_chunks = 0     # guarded-by: self._lock
         self.reconnects = 0
         self.send_errors = 0
         self.replayed_chunks = 0
@@ -183,7 +184,7 @@ class RemoteSink:
         self.wire_bytes = 0         # bytes actually written to the socket
         self.raw_bytes = 0          # what the same frames cost uncompressed
         self.last_error: Exception | None = None
-        self.failed = False
+        self.failed = False         # guarded-by: self._lock
         # durable journal: every chunk lands here (flushed) before it is
         # queued; block index == seq, so a reconnect can replay exactly
         # the server's unacked tail
@@ -760,21 +761,23 @@ class _HostState:
 
     def __init__(self, stream: HostStream, instance: str):
         self.stream = stream
-        self.instance = instance    # capture nonce; changes on restart
-        self.epoch = 0
-        self.next_seq = 0           # dedup floor across reconnects
-        self.rows_declared: int | None = None
-        self.got_bye = False
-        self.open_conns = 0
+        self.instance = instance        # guarded-by: self.lock
+        self.epoch = 0                  # guarded-by: self.lock
+        self.next_seq = 0               # guarded-by: self.lock
+        # BYE bookkeeping lives under the SERVER lock (wait_idle reads it
+        # through the _idle condition, which wraps IngestServer._lock)
+        self.rows_declared: int | None = None   # guarded-by: IngestServer._lock
+        self.got_bye = False                    # guarded-by: IngestServer._lock
+        self.open_conns = 0             # loop-thread-owned
         self.last_activity = time.monotonic()   # any frame from this host
-        self.codec = wire.RAW       # negotiated for the latest connection
+        self.codec = wire.RAW           # guarded-by: self.lock
         # fleet_dir durability: per-host journal + resume meta
-        self.journal: SpillStore | None = None
-        self.meta_path: str | None = None
-        self.tag_entries: list = []     # host-local tag id -> [name, loc]
-        self.stack_entries: list = []   # host-local stack id -> [tag ids]
-        self.meta_sizes = (-1, -1)      # entry counts at the last write
-        self.pending_backfill = False   # journaled history awaits replay
+        self.journal: SpillStore | None = None  # guarded-by: self.lock
+        self.meta_path: str | None = None       # guarded-by: self.lock
+        self.tag_entries: list = []     # guarded-by: self.lock
+        self.stack_entries: list = []   # guarded-by: self.lock
+        self.meta_sizes = (-1, -1)      # guarded-by: self.lock
+        self.pending_backfill = False   # guarded-by: self.lock
         # serializes frame handling across overlapping connections of the
         # same host (an old handler may still drain its socket while the
         # reconnect's handler is live): epoch/seq check-and-commit and the
@@ -884,33 +887,33 @@ class IngestServer:
         self._wake_r: socket.socket | None = None
         self._wake_w: socket.socket | None = None
         self._conns: set[_Conn] = set()     # loop-thread-owned
-        self._conn_socks: set[socket.socket] = set()
-        self._hosts: dict[str, _HostState] = {}
+        self._conn_socks: set[socket.socket] = set()    # guarded-by: self._lock
+        self._hosts: dict[str, _HostState] = {}         # guarded-by: self._lock
         self._lock = threading.Lock()
         # leaf lock for bare counters: safe to take under st.lock (taking
         # self._lock there would ABBA-deadlock with _register_host, which
         # holds self._lock and then takes st.lock)
         self._stats_lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
-        self._open_conns = 0
+        self._open_conns = 0                # guarded-by: self._lock
         self._stopped = threading.Event()   # stop accepting
         self._shutdown = threading.Event()  # stop the loop entirely
         # counters
-        self.connections = 0
-        self.stale_chunks = 0
-        self.duplicate_chunks = 0
-        self.lost_chunks = 0
-        self.bad_rows = 0
-        self.proto_errors = 0
-        self.worker_growth_rejected = 0
-        self.backfilled_chunks = 0
-        self.backfilled_rows = 0
-        self.deadline_closed = 0
-        self.idle_released = 0
-        self.shed_chunks = 0
-        self.shed_rows = 0
-        self.journal_errors = 0
-        self.heartbeats = 0
+        self.connections = 0                # guarded-by: self._lock
+        self.stale_chunks = 0               # guarded-by: self._stats_lock
+        self.duplicate_chunks = 0           # guarded-by: self._stats_lock
+        self.lost_chunks = 0                # guarded-by: self._stats_lock
+        self.bad_rows = 0                   # guarded-by: self._stats_lock
+        self.proto_errors = 0               # guarded-by: self._stats_lock
+        self.worker_growth_rejected = 0     # guarded-by: self._lock
+        self.backfilled_chunks = 0          # guarded-by: self._stats_lock
+        self.backfilled_rows = 0            # guarded-by: self._stats_lock
+        self.deadline_closed = 0            # guarded-by: self._stats_lock
+        self.idle_released = 0              # guarded-by: self._stats_lock
+        self.shed_chunks = 0                # guarded-by: self._stats_lock
+        self.shed_rows = 0                  # guarded-by: self._stats_lock
+        self.journal_errors = 0             # guarded-by: self._stats_lock
+        self.heartbeats = 0                 # guarded-by: self._stats_lock
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "IngestServer":
@@ -1024,8 +1027,12 @@ class IngestServer:
             st = self._hosts.get(host_id)
         if st is None:
             return False
-        st.stream.finish()
-        self.source.notify()
+        # finish() flips merge-gating state the gather loop reads under
+        # the fleet condition: an unlocked flip can be missed by a
+        # concurrent _gather_locked and stall the watermark a full poll
+        with self.source.cond:
+            st.stream.finish()
+            self.source.cond.notify_all()
         return True
 
     def wait_idle(self, timeout: float | None = 10.0) -> bool:
@@ -1069,7 +1076,7 @@ class IngestServer:
         return out
 
     # -- event loop ----------------------------------------------------------
-    def _loop(self) -> None:
+    def _loop(self) -> None:  # lint: event-loop
         """The selector loop: accepts, reads, frame dispatch, writes, and
         the deadline/idle/flow-control sweep — one thread for the whole
         fleet."""
@@ -1194,8 +1201,9 @@ class IngestServer:
             with self._lock:
                 st.rows_declared = int(bye.get("rows_sent", -1))
                 st.got_bye = True
-            st.stream.finish()
-            self.source.notify()
+            with self.source.cond:
+                st.stream.finish()
+                self.source.cond.notify_all()
             self._close_conn(conn)
         else:
             raise wire.WireError(
@@ -1383,6 +1391,7 @@ class IngestServer:
         self._journal_names[safe] = host_id
         return safe
 
+    # lint: disable=guarded-by(first-HELLO construction: the caller holds IngestServer._lock for the whole branch, so no frame handler can reach this _HostState through self._hosts yet)
     def _open_host_journal(self, st: _HostState, instance: str) -> None:
         """First HELLO of a host on this server: open its durable store.
         When a meta sidecar from a previous server run matches the
@@ -1441,7 +1450,7 @@ class IngestServer:
                 self.backfilled_chunks += 1
                 self.backfilled_rows += len(cols[0])
 
-    def _write_host_meta(self, st: _HostState) -> None:
+    def _write_host_meta(self, st: _HostState) -> None:  # guarded-by: _HostState.lock
         if st.meta_path is None:
             return
         st.meta_sizes = (len(st.tag_entries), len(st.stack_entries))
@@ -1542,7 +1551,7 @@ class IngestServer:
                     while st.journal.blocks < chunk.seq:
                         st.journal.append_block(*empty)
                     st.journal.append_block(*cols, sync=self.fleet_fsync)
-                except OSError:
+                except OSError as e:
                     # journal full: REFUSE the chunk (close the conn
                     # without committing) — the floor is unchanged, so
                     # the producer's reconnect replay re-delivers it once
@@ -1550,7 +1559,7 @@ class IngestServer:
                     # silently break the blocks == seq invariant.
                     with self._stats_lock:
                         self.journal_errors += 1
-                    raise _RefuseChunk()
+                    raise _RefuseChunk() from e
             if gap:
                 # a gap means chunks committed producer-side (flush reached
                 # the kernel) never arrived — e.g. lost in a reset before

@@ -302,7 +302,7 @@ def _read_exact(stream, n: int) -> bytes:
         if not part:
             if not buf:
                 return b""
-            raise WireError(f"stream truncated mid-frame "
+            raise WireError("stream truncated mid-frame "
                             f"({len(buf)}/{n} bytes)")
         buf += part
     return bytes(buf)

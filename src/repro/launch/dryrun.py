@@ -164,7 +164,6 @@ def lower_cell(arch: str, shape_name: str, mesh_name: str, *,
             step = make_train_step(cfg, adamw.AdamWConfig(),
                                    scan_layers=scan_layers,
                                    local_impl=local_impl)
-            err = None
             fn = lambda p, o, b: step(p, o, b, None)[:3]
             jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
                              donate_argnums=(0, 1))

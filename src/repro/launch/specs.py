@@ -8,14 +8,13 @@ No device memory is allocated — decode states come from ``jax.eval_shape``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ShapeSpec
-from repro.models import cross_memory, init_decode_state
+from repro.models import init_decode_state
 from repro.models.common import ModelConfig
 from repro.sharding.api import ShardingRules
 

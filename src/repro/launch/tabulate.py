@@ -19,9 +19,7 @@ def load(directory: str = "experiments/dryrun"):
 
 
 def render(rows, md: bool = False) -> str:
-    done = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
     out = []
-    sep = "|" if md else " "
     hdr = ["arch", "shape", "mesh", "GiB/chip", "t_comp(s)", "t_mem(s)",
            "t_coll(s)", "bound", "useful", "roofline", "note"]
     if md:

@@ -12,7 +12,6 @@ import argparse
 
 from repro import configs
 from repro.ft.monitor import run_with_restarts
-from repro.models.common import ModelConfig
 from repro.optim import adamw
 from repro.train.trainer import Trainer, TrainerConfig
 

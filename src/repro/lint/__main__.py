@@ -1,0 +1,6 @@
+"""Entry point: ``python -m repro.lint``."""
+import sys
+
+from repro.lint.runner import main
+
+sys.exit(main())

@@ -1,0 +1,104 @@
+"""CLI for the concurrency lint: ``python -m repro.lint [paths...]``.
+
+Exit codes: 0 clean, 1 findings (or stale baseline entries), 2 usage or
+parse errors.  ``--json`` emits the machine-readable report CI archives;
+the default text output is one ``path:line: [rule] message`` per finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.lint.engine import Baseline, run_lint
+
+DEFAULT_BASELINE = "lint-baseline.json"
+
+
+def collect_files(paths: list[str]) -> list[str]:
+    files: list[str] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for root, dirs, names in os.walk(path):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for name in sorted(names):
+                    if name.endswith(".py"):
+                        files.append(os.path.join(root, name))
+        else:
+            files.append(path)
+    return files
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="concurrency lint: guarded-by, lock-order, "
+                    "loop-blocking, publication-order")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit the JSON report instead of text")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help=f"baseline file (default {DEFAULT_BASELINE})")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore any baseline file")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="accept current findings into the baseline "
+                             "(reasons default to TODO and must be edited)")
+    args = parser.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    files = collect_files(paths)
+    if not files:
+        print(f"repro.lint: no python files under {paths}", file=sys.stderr)
+        return 2
+
+    baseline = None
+    if not args.no_baseline and not args.write_baseline \
+            and os.path.exists(args.baseline):
+        try:
+            baseline = Baseline.load(args.baseline)
+        except (ValueError, OSError, json.JSONDecodeError) as exc:
+            print(f"repro.lint: bad baseline: {exc}", file=sys.stderr)
+            return 2
+
+    result = run_lint(files, baseline=baseline)
+
+    if args.write_baseline:
+        for f in result.findings:
+            f.suppressed_by = None
+        Baseline.write(args.baseline, result.findings,
+                       reason="TODO: justify this accepted finding")
+        print(f"wrote {len(result.findings)} entr"
+              f"{'y' if len(result.findings) == 1 else 'ies'} to "
+              f"{args.baseline}; edit the reasons before committing")
+        return 0
+
+    if args.as_json:
+        print(json.dumps(result.to_json(), indent=2))
+    else:
+        for err in result.errors:
+            print(f"error: {err}")
+        for f in result.findings:
+            print(f.render())
+        for fp in result.stale_baseline:
+            print(f"stale baseline entry (fixed? delete it): {fp}")
+        bits = [f"{len(result.findings)} finding"
+                f"{'' if len(result.findings) == 1 else 's'}"]
+        if result.suppressed:
+            bits.append(f"{len(result.suppressed)} suppressed inline")
+        if result.baselined:
+            bits.append(f"{len(result.baselined)} baselined")
+        if result.stale_baseline:
+            bits.append(f"{len(result.stale_baseline)} stale baseline entries")
+        print(f"repro.lint: {', '.join(bits)} across {len(files)} files")
+
+    if result.errors:
+        return 2
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

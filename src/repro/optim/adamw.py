@@ -7,8 +7,6 @@ at 512 chips the moment memory per chip drops by the DP degree.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,6 @@ for that; tracked as future work in DESIGN.md.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -15,12 +15,11 @@ assignment.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def gpipe(stage_fn, mesh: Mesh, n_stages: int, n_micro: int,

@@ -21,9 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import cross_memory, decode_step, forward, init_decode_state
+from repro.models import decode_step, forward, init_decode_state
 from repro.models.common import ModelConfig
-from repro.sharding.api import constrain
 
 
 def make_prefill_step(cfg: ModelConfig, **fw_kwargs) -> Callable:

@@ -8,7 +8,6 @@ ready for ``jax.jit`` with the shardings produced by
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -9,8 +9,7 @@ the paper's workflow (§5) transplanted onto a training job.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import numpy as np

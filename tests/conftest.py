@@ -32,3 +32,30 @@ except ImportError:                                            # pragma: no cove
 
     given = settings = _skip_decorator
     st = _StrategyStub()
+
+
+# ---------------------------------------------------------------------------
+# Lock-order watchdog: a runtime sanitizer mirroring repro.lint's static
+# lock-order rule.  Every Lock/RLock created while the suite runs is
+# proxied; acquisition order between lock creation sites is recorded, and
+# the session fails if the observed order graph ever contains a cycle (a
+# latent ABBA deadlock that happened not to interleave).  Opt out with
+# GAPP_LOCK_WATCHDOG=0 (e.g. when profiling the suite itself).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session", autouse=True)
+def lock_order_watchdog():
+    if os.environ.get("GAPP_LOCK_WATCHDOG", "1") == "0":
+        yield None
+        return
+    from repro.lint.watchdog import LockWatchdog
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        yield wd
+    finally:
+        wd.uninstall()
+        cycles = wd.cycles()
+        assert not cycles, (
+            "lock-order watchdog observed a cyclic acquisition order "
+            "(latent ABBA deadlock):\n" + "\n".join(cycles))

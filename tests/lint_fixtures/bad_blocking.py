@@ -1,0 +1,31 @@
+"""Known-bad event-loop fixture: blocking calls inside selector callbacks.
+
+``_loop`` is the annotated root; ``_on_ready`` is a selector callback and
+sleeps, and the compaction helper it calls fsyncs — both reachable from
+the loop, both findings.  ``close`` also sleeps but is *not* reachable
+from the root, so it must not be flagged.
+"""
+import os
+import selectors
+import time
+
+
+class SleepyLoop:
+    def __init__(self):
+        self._sel = selectors.DefaultSelector()
+        self.fd = 0
+
+    def _loop(self):  # lint: event-loop
+        while True:
+            for _key, _events in self._sel.select(0.05):
+                self._on_ready(_key)
+
+    def _on_ready(self, key):
+        time.sleep(0.1)          # BAD: stalls every connected host
+        self._compact()
+
+    def _compact(self):
+        os.fsync(self.fd)        # BAD: disk barrier on the loop thread
+
+    def close(self):
+        time.sleep(0.2)          # fine: not reachable from _loop

@@ -1,0 +1,31 @@
+"""Known-bad guarded-by fixture: mutations outside the declared lock."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.value = 0       # guarded-by: self.lock
+        self.items = []      # guarded-by: self.lock
+
+    def good_bump(self):
+        with self.lock:
+            self.value += 1
+
+    def bad_bump(self):
+        self.value += 1      # BAD: no lock held
+
+    def bad_append(self):
+        self.items.append(1)  # BAD: container mutator outside the lock
+
+    def _locked_bump(self):  # guarded-by: self.lock
+        self.value += 1
+
+    def bad_contract_call(self):
+        self._locked_bump()  # BAD: contract method without the lock
+
+
+def bad_external(counter):
+    # Unique-owner resolution: `value` is guarded only by Counter, so a
+    # foreign-receiver mutation needs `counter.lock`.
+    counter.value = 5        # BAD

@@ -1,0 +1,29 @@
+"""Seeded ABBA cycle — the PR 4 shape the static pass must rediscover.
+
+``register`` takes the registry lock then a host lock; the chunk path
+takes the host lock and then (one call deep, so the rule has to be
+interprocedural) the registry lock.  Neither path deadlocks alone; run
+them on two threads and they deadlock against each other.
+"""
+import threading
+
+
+class AbbaServer:
+    def __init__(self):
+        self._registry_lock = threading.Lock()
+        self._host_lock = threading.Lock()
+        self.hosts = {}
+        self.stats = 0
+
+    def register(self, name):
+        with self._registry_lock:          # A ...
+            with self._host_lock:          # ... then B
+                self.hosts[name] = object()
+
+    def on_chunk(self, name):
+        with self._host_lock:              # B ...
+            self._note_registry()
+
+    def _note_registry(self):
+        with self._registry_lock:          # ... then A  (ABBA!)
+            self.stats += 1

@@ -1,0 +1,16 @@
+"""Known-bad publication fixture: a row field written after publication.
+
+The metas append is the publication point; the times append lands after
+it, so a reader that observes the meta can see a torn row.
+"""
+from collections import deque
+
+
+class TornShard:
+    def __init__(self):
+        self.times = deque()
+        self.metas = deque()
+
+    def append(self, t, meta):
+        self.metas.append(meta)   # publishes: self.times
+        self.times.append(t)      # BAD: late write

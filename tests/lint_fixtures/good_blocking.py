@@ -1,0 +1,24 @@
+"""Known-good event-loop fixture: callbacks stay non-blocking."""
+import selectors
+
+
+class PromptLoop:
+    def __init__(self):
+        self._sel = selectors.DefaultSelector()
+        self.pending = []
+
+    def _loop(self):  # lint: event-loop
+        while True:
+            for _key, _events in self._sel.select(0.05):
+                self._on_ready(_key)
+
+    def _on_ready(self, key):
+        sock = key.fileobj
+        data = sock.recv(4096)   # non-blocking socket: fine
+        if data:
+            self.pending.append(data)
+
+    def close(self):
+        # Blocking is fine OFF the loop thread.
+        import time
+        time.sleep(0.2)

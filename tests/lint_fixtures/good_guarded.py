@@ -1,0 +1,33 @@
+"""Known-good guarded-by fixture: every mutation path holds the lock."""
+import threading
+
+
+class GoodCounter:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.ready = threading.Condition(self.lock)  # alias of self.lock
+        self.value = 0       # guarded-by: self.lock
+        self.items = []      # guarded-by: self.lock
+
+    def bump(self):
+        with self.lock:
+            self.value += 1
+
+    def bump_via_condition(self):
+        # Acquiring the Condition IS acquiring the aliased lock.
+        with self.ready:
+            self.items.append(self.value)
+            self.ready.notify()
+
+    def _bump_locked(self):  # guarded-by: self.lock
+        self.value += 1
+        self.items.clear()
+
+    def outer(self):
+        with self.lock:
+            self._bump_locked()
+
+
+def external(counter):
+    with counter.lock:
+        counter.value = 5

@@ -1,0 +1,33 @@
+"""Acyclic lock order — the leaf-stats-lock shape PR 4 actually shipped.
+
+The registry lock may nest a host lock, and the host lock may nest the
+stats lock, but the stats lock is a leaf: nothing is ever acquired under
+it, so the order graph is a straight chain.
+"""
+import threading
+
+
+class LeafLockServer:
+    def __init__(self):
+        self._registry_lock = threading.Lock()
+        self._host_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.hosts = {}
+        self.stats = 0
+
+    def register(self, name):
+        with self._registry_lock:
+            with self._host_lock:
+                self.hosts[name] = object()
+
+    def on_chunk(self, name):
+        with self._host_lock:
+            self._bump_stats()
+
+    def _bump_stats(self):
+        with self._stats_lock:
+            self.stats += 1
+
+    def report(self):
+        with self._stats_lock:
+            return self.stats

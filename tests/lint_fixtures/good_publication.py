@@ -1,0 +1,14 @@
+"""Known-good publication fixture: all fields written, then published."""
+from collections import deque
+
+
+class OrderedShard:
+    def __init__(self):
+        self.times = deque()
+        self.deltas = deque()
+        self.metas = deque()
+
+    def append(self, t, delta, meta):
+        self.times.append(t)
+        self.deltas.append(delta)
+        self.metas.append(meta)   # publishes: self.times, self.deltas

@@ -1,10 +1,9 @@
 """Detector post-processing: sample attachment, path merge, top-N ranking,
 stack-top fallback, offline sampling replay."""
-import numpy as np
 import pytest
 
-from repro.core import (ACTIVATE, DEACTIVATE, SampleBuffer, Tracer, detect,
-                        detect_offline, simulate_samples)
+from repro.core import (SampleBuffer, Tracer, detect, detect_offline,
+                        simulate_samples)
 from tests.test_tracer import FakeClock
 
 
@@ -48,7 +47,7 @@ def test_distinct_paths_ranked_separately():
     clk = FakeClock()
     tr = Tracer(n_min=1.9, clock=clk)
     w = tr.register_worker("w")
-    other = tr.register_worker("other")
+    tr.register_worker("other")
     for rep in range(6):
         tr.begin(w, "slow_path")
         clk.advance(4_000_000)

@@ -211,7 +211,7 @@ def test_from_fleet_dir_matches_live_two_hosts(tmp_path):
             sink = attach_remote(s, server.address, host_id=f"host{hi}",
                                  clock_offset_ns=0)
             prods.append((s, wids, clk, sink))
-            _wait(lambda: server.stats()["hosts"] == hi + 1)
+            _wait(lambda hi=hi: server.stats()["hosts"] == hi + 1)
         for (s, wids, clk, sink) in prods:
             with s.running():
                 for _ in range(100):

@@ -2,7 +2,6 @@
 oracle; a real-socket 2-producer ingest reproduces the offline merge of the
 same events; host provenance flows into text/json/chrome exporters."""
 import json
-import os
 import time
 
 import numpy as np

@@ -1,0 +1,387 @@
+"""Tests for the concurrency lint (repro.lint): one bad + one good
+fixture per rule, suppression semantics, baseline roundtrip/staleness,
+the CLI contract, the src-tree-stays-clean gate, and the runtime
+lock-order watchdog."""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.lint import RULES, run_lint
+from repro.lint.engine import Baseline
+from repro.lint.runner import collect_files
+from repro.lint.watchdog import LockWatchdog, _LockProxy
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "lint_fixtures")
+
+
+def fixture(name: str) -> str:
+    return os.path.join(FIXTURES, name)
+
+
+def lint_fixture(name: str):
+    return run_lint([fixture(name)])
+
+
+# ---------------------------------------------------------------------------
+# rule registry sanity
+# ---------------------------------------------------------------------------
+
+def test_rule_names_are_documented():
+    assert RULES == ("guarded-by", "lock-order", "loop-blocking",
+                     "publication-order")
+
+
+# ---------------------------------------------------------------------------
+# guarded-by
+# ---------------------------------------------------------------------------
+
+def test_guarded_by_flags_bad_fixture():
+    res = lint_fixture("bad_guarded.py")
+    assert all(f.rule == "guarded-by" for f in res.findings)
+    assert {f.line for f in res.findings} == {16, 19, 25, 31}
+    assert len(res.findings) == 4
+    # one of them is the method-contract violation
+    assert any("requires" in f.message and "held" in f.message
+               for f in res.findings)
+    # and one is the unique-owner foreign-receiver mutation
+    assert any(f.symbol.startswith("bad_external") for f in res.findings)
+
+
+def test_guarded_by_passes_good_fixture():
+    res = lint_fixture("good_guarded.py")
+    assert res.findings == []
+    assert res.ok
+
+
+# ---------------------------------------------------------------------------
+# lock-order (seeded ABBA shape from the ingest-server history)
+# ---------------------------------------------------------------------------
+
+def test_lock_order_rediscovers_seeded_abba():
+    res = lint_fixture("bad_lock_order.py")
+    assert len(res.findings) == 1
+    f = res.findings[0]
+    assert f.rule == "lock-order"
+    assert f.symbol.startswith("cycle:")
+    assert "_registry_lock" in f.symbol and "_host_lock" in f.symbol
+    # the report names concrete acquisition sites for the cycle edges
+    assert "bad_lock_order.py:" in f.message
+
+
+def test_lock_order_passes_leaf_hierarchy():
+    res = lint_fixture("good_lock_order.py")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# loop-blocking (blocking call inside a selector callback)
+# ---------------------------------------------------------------------------
+
+def test_loop_blocking_flags_reachable_calls():
+    res = lint_fixture("bad_blocking.py")
+    assert {f.line for f in res.findings} == {24, 28}
+    assert all(f.rule == "loop-blocking" for f in res.findings)
+    # findings carry the call chain back to the annotated loop root
+    assert all("reachable from event loop via" in f.message
+               for f in res.findings)
+    assert any("time.sleep" in f.message for f in res.findings)
+    assert any("os.fsync" in f.message for f in res.findings)
+
+
+def test_loop_blocking_ignores_unreachable_and_safe_calls():
+    res = lint_fixture("good_blocking.py")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# publication-order
+# ---------------------------------------------------------------------------
+
+def test_publication_order_flags_torn_row():
+    res = lint_fixture("bad_publication.py")
+    assert len(res.findings) == 2
+    by_kind = {f.symbol.rsplit(":", 1)[-1]: f for f in res.findings}
+    assert set(by_kind) == {"unwritten", "late-write"}
+    assert by_kind["unwritten"].line == 15
+    assert by_kind["late-write"].line == 16
+
+
+def test_publication_order_passes_ordered_writes():
+    res = lint_fixture("good_publication.py")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+BUMP_TEMPLATE = """\
+import threading
+
+
+class C:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.n = 0          # guarded-by: self.lock
+
+    def bump(self):
+        self.n += 1{suffix}
+"""
+
+
+def test_suppression_with_reason_moves_finding_aside(tmp_path):
+    p = tmp_path / "sup.py"
+    p.write_text(BUMP_TEMPLATE.format(
+        suffix="  # lint: disable=guarded-by(single-threaded test helper)"))
+    res = run_lint([str(p)])
+    assert res.findings == []
+    assert len(res.suppressed) == 1
+    assert res.suppressed[0].suppressed_by == "single-threaded test helper"
+
+
+def test_suppression_without_reason_is_itself_a_finding(tmp_path):
+    p = tmp_path / "sup.py"
+    p.write_text(BUMP_TEMPLATE.format(suffix="  # lint: disable=guarded-by"))
+    res = run_lint([str(p)])
+    assert len(res.findings) == 1
+    assert res.findings[0].symbol.endswith(":no-reason")
+    assert not res.ok
+
+
+def test_suppression_on_line_above_statement(tmp_path):
+    p = tmp_path / "sup.py"
+    body = BUMP_TEMPLATE.format(suffix="").replace(
+        "        self.n += 1",
+        "        # lint: disable=guarded-by(shutdown path, single owner)\n"
+        "        self.n += 1")
+    p.write_text(body)
+    res = run_lint([str(p)])
+    assert res.findings == []
+    assert len(res.suppressed) == 1
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    bl_path = str(tmp_path / "baseline.json")
+    res = lint_fixture("bad_guarded.py")
+    assert len(res.findings) == 4
+    Baseline.write(bl_path, res.findings, reason="accepted for test")
+
+    bl = Baseline.load(bl_path)
+    res2 = run_lint([fixture("bad_guarded.py")], baseline=bl)
+    assert res2.findings == []
+    assert len(res2.baselined) == 4
+    assert res2.stale_baseline == []
+    assert res2.ok
+
+    # the same baseline against a clean file: every entry is stale, and a
+    # stale entry fails the run (it means the debt was paid — delete it)
+    bl3 = Baseline.load(bl_path)
+    res3 = run_lint([fixture("good_guarded.py")], baseline=bl3)
+    assert len(res3.stale_baseline) == 4
+    assert not res3.ok
+
+
+def test_baseline_fingerprints_are_line_free(tmp_path):
+    res = lint_fixture("bad_guarded.py")
+    for f in res.findings:
+        assert f.fingerprint == f"{f.rule}:{f.path}:{f.symbol}"
+        assert f":{f.line}" not in f.fingerprint.replace(f.path, "")
+
+
+# ---------------------------------------------------------------------------
+# the annotated tree itself must stay clean (the CI gate, in-process)
+# ---------------------------------------------------------------------------
+
+def test_src_tree_lints_clean(monkeypatch):
+    monkeypatch.chdir(ROOT)
+    files = collect_files(["src"])
+    assert files, "src tree not found"
+    baseline = Baseline.load("lint-baseline.json")
+    res = run_lint(files, baseline=baseline)
+    assert res.errors == []
+    assert res.findings == [], "\n".join(f.render() for f in res.findings)
+    assert res.stale_baseline == []
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.lint", *args],
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=120)
+
+
+def test_cli_bad_fixture_exits_1_with_json_report():
+    proc = _run_cli("--no-baseline", "--json",
+                    os.path.join("tests", "lint_fixtures", "bad_blocking.py"))
+    assert proc.returncode == 1
+    report = json.loads(proc.stdout)
+    assert report["ok"] is False
+    assert len(report["findings"]) == 2
+    assert all(f["rule"] == "loop-blocking" for f in report["findings"])
+
+
+def test_cli_good_fixture_exits_0():
+    proc = _run_cli("--no-baseline",
+                    os.path.join("tests", "lint_fixtures", "good_guarded.py"))
+    assert proc.returncode == 0
+    assert "0 findings" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# runtime lock-order watchdog
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def _session_graph_guard(lock_order_watchdog):
+    """The tests below create cyclic acquisition orders ON PURPOSE.  The
+    session-wide watchdog (conftest) proxies the inner locks too — and
+    its ``_creation_site`` walks past the nested watchdog's frames to the
+    very same test lines — so restore its edge graph afterwards or the
+    deliberate ABBA would fail the whole session at teardown."""
+    if lock_order_watchdog is None:
+        yield
+        return
+    with lock_order_watchdog._mu:
+        snapshot = dict(lock_order_watchdog.edges)
+    yield
+    with lock_order_watchdog._mu:
+        lock_order_watchdog.edges.clear()
+        lock_order_watchdog.edges.update(snapshot)
+
+
+@pytest.mark.usefixtures("_session_graph_guard")
+def test_watchdog_detects_sequential_abba():
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        a = threading.Lock()
+        b = threading.Lock()
+        with a:
+            with b:
+                pass
+        with b:        # opposite order: never deadlocks in this run,
+            with a:    # but the order graph now has a cycle
+                pass
+    finally:
+        wd.uninstall()
+    cycles = wd.cycles()
+    assert cycles, "ABBA acquisition order not detected"
+    assert "->" in cycles[0]
+
+
+def test_watchdog_accepts_consistent_hierarchy():
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        a = threading.Lock()
+        b = threading.Lock()
+        c = threading.Lock()
+        for _ in range(3):
+            with a:
+                with b:
+                    with c:
+                        pass
+    finally:
+        wd.uninstall()
+    assert wd.cycles() == []
+
+
+@pytest.mark.usefixtures("_session_graph_guard")
+def test_watchdog_ignores_same_site_nesting():
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        locks = [threading.Lock() for _ in range(2)]  # ONE creation site
+        with locks[0]:
+            with locks[1]:
+                pass
+        with locks[1]:
+            with locks[0]:
+                pass
+    finally:
+        wd.uninstall()
+    # a site-level graph cannot order instances of one site: no self-edge
+    assert wd.cycles() == []
+
+
+@pytest.mark.usefixtures("_session_graph_guard")
+def test_watchdog_records_through_condition():
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        a = threading.Lock()
+        b = threading.Lock()
+        cond = threading.Condition(a)   # wraps the proxy
+        with cond:
+            with b:
+                pass
+        with b:
+            with a:
+                pass
+    finally:
+        wd.uninstall()
+    assert wd.cycles(), "Condition-wrapped acquire was not recorded"
+
+
+def test_watchdog_thread_start_completes():
+    """Regression: a thread started while the watchdog is installed sets
+    its ``_started`` Event through a proxied lock BEFORE the thread is
+    registered in ``threading._active`` (3.10 bootstrap order); the
+    recorder must not call ``current_thread()`` there — the _DummyThread
+    it fabricates acquires another proxied lock and recurses forever,
+    hanging ``Thread.start()`` in the parent."""
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        done = []
+        threads = [threading.Thread(target=done.append, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10)
+        assert all(not t.is_alive() for t in threads)
+        assert sorted(done) == list(range(8))
+    finally:
+        wd.uninstall()
+
+
+def test_watchdog_uninstall_restores_factories():
+    wd = LockWatchdog()
+    before_lock, before_rlock = threading.Lock, threading.RLock
+    wd.install()
+    assert threading.Lock is not before_lock
+    lk = threading.Lock()
+    assert isinstance(lk, _LockProxy)
+    wd.uninstall()
+    assert threading.Lock is before_lock
+    assert threading.RLock is before_rlock
+
+
+def test_watchdog_reentrant_rlock_records_no_self_edge():
+    wd = LockWatchdog()
+    wd.install()
+    try:
+        r = threading.RLock()
+        with r:
+            with r:     # legal re-entrancy
+                pass
+    finally:
+        wd.uninstall()
+    assert wd.edges == {}
+    assert wd.cycles() == []

@@ -6,7 +6,7 @@ import pytest
 
 from repro import configs
 from repro.models import (cross_memory, decode_step, forward,
-                          init_decode_state, init_lm, lm_loss)
+                          init_decode_state, init_lm)
 from repro.models.common import ModelConfig
 
 KEY = jax.random.PRNGKey(0)

@@ -9,10 +9,8 @@ unrotated one.
 import os
 
 import numpy as np
-import pytest
 
 from repro.core import SpillStore
-from repro.fleet import wire
 
 
 def _block(t0, n=10):

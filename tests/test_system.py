@@ -1,9 +1,6 @@
 """End-to-end behaviour: train loop (loss drops, profile produced, resume
 from checkpoint), serving engine, roofline HLO accounting."""
-import os
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (ACTIVATE, DEACTIVATE, Gapp, Tracer, compute_numpy,
-                        detect, profile_log)
+from repro.core import ACTIVATE, DEACTIVATE, Gapp, Tracer, compute_numpy
 
 
 class FakeClock:

@@ -1,5 +1,4 @@
 """Waker analysis + bottleneck classification (paper §7 extensions)."""
-import numpy as np
 import pytest
 
 from repro.core import (Tracer, classify_report, classify_tag,
