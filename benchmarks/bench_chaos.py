@@ -261,6 +261,7 @@ def run_chaos(producers: int = 64, rounds: int = 8, spans: int = 4,
         "rows_total": expected_rows,
         "seed": seed,
         "wall_s": wall_s,
+        "ingest_events_per_s": expected_rows / wall_s if wall_s else 0.0,
         "final_fold_ms": fold_ms,
         "producer_kills": kills,
         "server_restarts": restarts_done,

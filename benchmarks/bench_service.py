@@ -1,0 +1,154 @@
+"""Service smoke: live HTTP query API latency + contract gates.
+
+Starts a journaled 2-producer ingest (durable ``fleet_dir``), attaches a
+:class:`repro.fleet.ProfilerService`, and measures endpoint latency while
+the contracts that make the API trustworthy are GATED (raise on
+violation — this smoke fails the job, it does not warn):
+
+1. ``GET /api/report`` is byte-identical to ``session.export("json")``
+   — the live API is the canonical exporter, not a lookalike;
+2. ``GET /api/top?window=`` over the tail window returns real entries
+   (the incremental journal re-fold sees the bottleneck paths);
+3. ``GET /metrics`` carries the session / ingest / journal / service
+   gauge families in Prometheus 0.0.4 text exposition;
+4. ``GET /api/hosts`` lists exactly the producing hosts.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import statistics
+import tempfile
+import time
+import urllib.request
+
+from repro.core import ProfileSession
+from repro.fleet import IngestServer, ProfilerService, attach_remote
+
+
+class _StepClock:
+    """Deterministic per-producer capture clock (ns)."""
+
+    def __init__(self, base: int = 0):
+        self.t = base
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance(self, ns: int) -> None:
+        self.t += ns
+
+
+def _get(addr, path, timeout=10.0):
+    url = "http://%s:%d%s" % (addr[0], addr[1], path)
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read()
+
+
+def run_service(producers: int = 2, spans: int = 200,
+                requests: int = 50) -> dict:
+    work_dir = tempfile.mkdtemp(prefix="gapp-svc-")
+    fleet_dir = f"{work_dir}/fleet"
+    server = IngestServer(fleet_dir=fleet_dir)
+    server.start()
+    sess = ProfileSession(server.source, n_min=float(producers))
+    sess.start()
+    svc = ProfilerService(sess, server=server).start()
+    try:
+        # Disjoint capture timelines: exactly one worker is ever active,
+        # so every slice is serialized under n_min == producers and the
+        # top-N gates exercise real bottleneck paths.
+        for i in range(producers):
+            clk = _StepClock(i * spans * 1500)
+            s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+            w = s.register_worker("w0")
+            sink = attach_remote(s, server.address, host_id=f"host{i}",
+                                 clock_offset_ns=0,
+                                 journal=f"{work_dir}/host{i}.journal")
+            for _ in range(spans):
+                s.begin(w, "work")
+                clk.advance(1000)
+                s.end(w)
+                clk.advance(500)
+            s.result()
+            sink.close()
+            assert not sink.failed and sink.dropped_chunks == 0, sink.stats()
+        assert server.wait_idle(30.0), server.stats()
+        want_events = producers * spans * 2
+        deadline = time.time() + 30.0
+        while (sess.stats()["events_folded"] < want_events
+               and time.time() < deadline):
+            time.sleep(0.01)
+        folded = sess.stats()["events_folded"]
+        assert folded == want_events, (folded, want_events)
+
+        addr = svc.address
+
+        def timed(path, n):
+            lat, body = [], b""
+            for _ in range(n):
+                t0 = time.perf_counter()
+                status, body = _get(addr, path)
+                lat.append((time.perf_counter() - t0) * 1e3)
+                assert status == 200, (path, status)
+            return statistics.median(lat), body
+
+        report_ms, body = timed("/api/report", requests)
+        # gate 1: the live API IS the canonical exporter
+        assert body == sess.export("json").encode("utf-8")
+        rep = json.loads(body)
+        assert rep["schema_version"] == 3, rep["schema_version"]
+
+        # tail window: a third of the fleet-time span, always populated
+        window_s = producers * spans * 1500 / 3 / 1e9
+        top_ms, tbody = timed(f"/api/top?n=10&window={window_s:g}",
+                              max(requests // 5, 1))
+        top = json.loads(tbody)
+        assert top["entries"], top              # gate 2
+
+        metrics_ms, mbody = timed("/metrics", max(requests // 5, 1))
+        text = mbody.decode("utf-8")
+        for needle in ("gapp_session_events_folded", "gapp_fleet_rows_in",
+                       "gapp_ingest_lost_chunks", "gapp_journal_blocks",
+                       "gapp_service_requests"):
+            assert needle in text, needle       # gate 3
+
+        hosts_ms, hbody = timed("/api/hosts", 5)
+        hosts = json.loads(hbody)["hosts"]
+        assert set(hosts) == {f"host{i}" for i in range(producers)}  # gate 4
+
+        st = svc.stats()
+        return {
+            "producers": producers,
+            "spans": spans,
+            "events_folded": int(folded),
+            "report_ms": report_ms,
+            "report_bytes": len(body),
+            "report_requests_per_s": 1e3 / report_ms if report_ms else 0.0,
+            "top_window_ms": top_ms,
+            "top_window_s": window_s,
+            "top_entries": len(top["entries"]),
+            "metrics_ms": metrics_ms,
+            "hosts_ms": hosts_ms,
+            "service_requests": st["requests"],
+            "service_http_errors": st["http_errors"],
+            "window_folds": st["window_folds"],
+            "report_equal": True,
+        }
+    finally:
+        svc.close()
+        sess.stop()
+        server.close()
+        shutil.rmtree(work_dir, ignore_errors=True)
+
+
+def run():
+    res = run_service()
+    yield ("service_report_get", res["report_ms"] * 1e3,
+           f"{res['report_bytes']}B equal={res['report_equal']}")
+    yield ("service_top_window", res["top_window_ms"] * 1e3,
+           f"entries={res['top_entries']}")
+
+
+if __name__ == "__main__":
+    print(json.dumps(run_service(), indent=2))

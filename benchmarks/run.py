@@ -120,10 +120,30 @@ def smoke_chaos(producers: int, out: str) -> dict:
     return res
 
 
+def smoke_service(producers: int, out: str) -> dict:
+    """Service smoke: the live HTTP query API (ProfilerService) over a
+    journaled 2-producer ingest — endpoint latency plus GATED contracts:
+    /api/report byte-equal to export("json"), windowed /api/top entries
+    from the journal re-fold, /metrics exposition families, /api/hosts
+    roster (``python -m benchmarks.run --smoke service`` ->
+    BENCH_service.json)."""
+    from benchmarks import bench_service
+    res = bench_service.run_service(producers=producers)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# service: /api/report {res['report_ms']:.2f} ms "
+          f"({res['report_bytes']} B, equal={res['report_equal']}), "
+          f"/api/top?window {res['top_window_ms']:.2f} ms "
+          f"({res['top_entries']} entries), /metrics "
+          f"{res['metrics_ms']:.2f} ms -> {out}")
+    return res
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", choices=["detect", "probe", "session",
-                                        "fleet", "chaos"],
+                                        "fleet", "chaos", "service"],
                     help="run one fast smoke benchmark and write a JSON "
                          "artifact instead of the full CSV harness")
     ap.add_argument("--producers", type=int, default=2,
@@ -155,6 +175,9 @@ def main() -> None:
         return
     if args.smoke == "chaos":
         smoke_chaos(args.chaos_producers, args.out or "BENCH_chaos.json")
+        return
+    if args.smoke == "service":
+        smoke_service(args.producers, args.out or "BENCH_service.json")
         return
 
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,

@@ -45,6 +45,8 @@ _DEFAULT_KEYS = {
     "session": ("+ram_events_per_s", "capped_snapshot_ms"),
     "fleet": ("+ingest_events_per_s", "final_report_ms",
               "+wire_compression_ratio"),
+    "chaos": ("+ingest_events_per_s",),
+    "service": ("report_ms", "top_window_ms", "metrics_ms"),
 }
 
 
@@ -84,7 +86,8 @@ def compare(base: dict, new: dict, keys: tuple[str, ...],
 
 def _series_kind(path: str) -> str:
     base = os.path.basename(path)
-    for kind in ("probe", "detect", "session", "fleet"):
+    for kind in ("probe", "detect", "session", "fleet", "chaos",
+                 "service"):
         if kind in base:
             return kind
     return os.path.splitext(base)[0] or "bench"

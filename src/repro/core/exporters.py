@@ -166,10 +166,14 @@ def _export_callback(rep, *, session=None, callback=None, **kw):
 @register_exporter("watch", capabilities={"push", "live", "incremental",
                                           "subscription"})
 def _export_watch(rep, *, session=None, callback=None, every: float = 0.5,
-                  top_n: int | None = None, **kw):
+                  top_n: int | None = None, payload: bool = False, **kw):
     """Subscribe ``callback`` to live top-N updates on ``session``; the
     drain worker pushes a fresh incremental report every ``every`` seconds
-    (plus one final report at close).  Returns the unsubscribe handle."""
+    (plus one final report at close).  Returns the unsubscribe handle.
+    ``payload=True`` delivers the JSON-ready ``/api/stream`` frame (with
+    ``worker_hosts``/``per_host`` lanes and ``health``) instead of the
+    report object — see :func:`repro.obs.payload.build_watch_payload`."""
     if session is None or callback is None:
         raise ValueError("watch exporter needs session= and callback=")
-    return session.watch(callback, every=every, top_n=top_n)
+    return session.watch(callback, every=every, top_n=top_n,
+                         payload=payload)

@@ -88,6 +88,27 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
 JSON_SCHEMA_VERSION = 3
 
 
+def path_entries(rep: BottleneckReport,
+                 max_paths: int | None = None) -> list[dict]:
+    """JSON-ready ranked bottleneck entries — the single builder behind
+    ``to_json``'s ``paths`` array, the watch/stream payloads and the
+    service's ``/api/top``, so the three surfaces cannot drift apart."""
+    paths = rep.paths if max_paths is None else rep.paths[:max_paths]
+    return [
+        {
+            "rank": i + 1,
+            "path": rep.path_str(p),
+            "cmetric_s": p.cmetric,
+            "slices": p.slices,
+            "samples": {rep.tag_name(t): c for t, c in
+                        p.tag_counts.most_common()},
+            "stack_top": {rep.tag_name(t): c for t, c in
+                          p.stack_top_counts.most_common()},
+        }
+        for i, p in enumerate(paths)
+    ]
+
+
 def to_json(rep: BottleneckReport) -> str:
     ct = rep.critical_table
     host_fields = {}
@@ -108,19 +129,7 @@ def to_json(rep: BottleneckReport) -> str:
                           if ct is not None and len(ct) else 0.0),
         "per_worker_cmetric_s": rep.per_worker.tolist(),
         "worker_names": rep.worker_names,
-        "paths": [
-            {
-                "rank": i + 1,
-                "path": rep.path_str(p),
-                "cmetric_s": p.cmetric,
-                "slices": p.slices,
-                "samples": {rep.tag_name(t): c for t, c in
-                            p.tag_counts.most_common()},
-                "stack_top": {rep.tag_name(t): c for t, c in
-                              p.stack_top_counts.most_common()},
-            }
-            for i, p in enumerate(rep.paths)
-        ],
+        "paths": path_entries(rep),
     }, indent=2)
 
 

@@ -193,6 +193,7 @@ class _Watch:
     callback: Callable
     every: float
     top_n: int | None
+    payload: bool = False    # deliver a JSON-ready dict, not the report
     next_due: float = 0.0    # guarded-by: ProfileSession._watch_lock
 
 
@@ -451,13 +452,20 @@ class ProfileSession:
 
     # -- watchers (live incremental push) ------------------------------------
     def watch(self, callback: Callable, every: float = 0.5,
-              top_n: int | None = None) -> Callable[[], None]:
+              top_n: int | None = None,
+              payload: bool = False) -> Callable[[], None]:
         """Push an incremental report to ``callback`` every ``every``
         seconds while the session runs (first fire is immediate; a final
         report is always pushed at close).  Returns an unsubscribe handle.
         Callback exceptions are recorded in :attr:`watch_errors`, never
-        raised into the drain worker."""
-        w = _Watch(callback, float(every), top_n)
+        raised into the drain worker.
+
+        ``payload=True`` delivers the JSON-ready frame built by
+        :func:`repro.obs.payload.build_watch_payload` instead of the raw
+        report — the same dict (``top`` + ``worker_hosts`` / ``per_host``
+        lanes + ``health`` counters) that ``GET /api/stream`` pushes, so
+        a watch callback and a stream subscriber can share rendering."""
+        w = _Watch(callback, float(every), top_n, payload)
         with self._watch_lock:
             self._watchers.append(w)
         def unsubscribe() -> None:
@@ -478,7 +486,12 @@ class ProfileSession:
                 w.next_due = now + w.every
         for w in due:
             try:
-                w.callback(self.snapshot(w.top_n))
+                rep = self.snapshot(w.top_n)
+                if w.payload:
+                    from repro.obs.payload import build_watch_payload
+                    w.callback(build_watch_payload(self, rep, w.top_n))
+                else:
+                    w.callback(rep)
             except Exception as e:          # noqa: BLE001 — user callback
                 self.watch_errors.append(e)
 
@@ -580,9 +593,56 @@ class ProfileSession:
     def render(self, **kw) -> str:
         return self.export("text", **kw)
 
+    def serve(self, addr: tuple[str, int] = ("127.0.0.1", 0), **kw):
+        """Start a :class:`repro.fleet.service.ProfilerService` over this
+        session: the live HTTP query API + dashboard (``/``,
+        ``/api/report``, ``/api/top``, ``/api/hosts``, ``/api/stream``,
+        ``/metrics``).  Keyword arguments (``server=``, ``fleet_dir=``,
+        ``retention=``, ``top_n=``) pass through; returns the started
+        service — ``close()`` it when done (the session is untouched)."""
+        from repro.fleet.service import ProfilerService
+        return ProfilerService(self, addr, **kw).start()
+
     # -- observability ---------------------------------------------------------
     def stats(self) -> dict:
-        """Counters for dashboards/tests: capture, fold and memory state."""
+        """Counters for dashboards/tests: capture, fold and memory state.
+
+        The key sets below are a STABLE schema — ``/metrics`` names
+        derive from them mechanically and
+        ``tests/test_stats_schema.py`` pins them; removing or renaming a
+        key is a breaking change, new keys are additive.  ``mode`` is
+        ``"live"`` or ``"offline"`` and selects which set applies.
+
+        Live sessions (``mode == "live"``):
+
+        * ``events_folded`` — events merged+folded so far;
+        * ``events_pending`` — ring entries not yet drained;
+        * ``ring_dropped`` — events lost to ring overflow (capture loss);
+        * ``tolerance_dropped`` — events rejected by the nesting checker;
+        * ``store_rows`` / ``store_resident_rows`` — total captured rows
+          vs rows still resident in memory (the rest spilled);
+        * ``resident_bytes`` — tracer memory footprint;
+        * ``samples`` — sampling-probe sub-dict (``ticks``, ``hits``,
+          ``stored``, ``dropped``);
+        * ``watch_errors`` — callback exceptions swallowed;
+        * ``sinks`` — per-transport :meth:`RemoteSink.stats` list, only
+          when fleet sinks are attached.
+
+        Offline / fleet sessions (``mode == "offline"``):
+
+        * ``events_folded`` — rows folded from the source;
+        * ``sanitize_dropped`` — rows rejected during chunk sanitising;
+        * ``slices`` — closed spans folded;
+        * ``critical_rows`` — rows in the critical table;
+        * ``done`` — source fully drained;
+        * ``watch_errors`` — as above;
+        * ``source`` — the source's own stats when it has any (a
+          :class:`FleetSource` surfaces ``hosts``, ``rows_in``,
+          ``chunks_in``, ``buffered_rows``, ``clock_clamped``,
+          ``shed_chunks``, ``shed_rows``, ``idle_hosts``,
+          ``accepting``), so a consumer can tell whether the fold was
+          complete or degraded.
+        """
         if self.source.live:
             tr = self.tracer
             store = tr.store

@@ -56,6 +56,18 @@ deleted once they fall entirely below BOTH the retention horizon
 (:meth:`set_ack_floor` — the consumer's durable receive watermark), so
 retention can never drop a block a replay might still need.  The default
 (``retain_blocks=None``) keeps everything.
+
+**Capture-time block index** (time-windowed queries must not re-read a
+week of history): every complete block's first/last event timestamp is
+indexed in memory — recovered on open by reading exactly two i64s per
+block (the payload's first and last ``times`` entry; payload bodies are
+still seeked over, not decoded) and maintained on every append.  Blocks
+are written in time order, so a window ``[t_lo, t_hi]`` maps to one
+contiguous global block range: :meth:`iter_block_columns_window` seeks
+straight to it and decodes only intersecting blocks, and
+:meth:`prune_before_time` turns a wall-clock age budget into the same
+whole-segment pruning as ``retain_blocks`` (still honouring the ack
+floor unless explicitly told the journal has no acking consumer).
 """
 from __future__ import annotations
 
@@ -107,6 +119,11 @@ class SpillStore:
         self._active_rows = 0       # guarded-by: self._lock
         self._active_opened = time.monotonic()  # guarded-by: self._lock
         self._ack_floor = 0         # guarded-by: self._lock
+        # capture-time bounds per complete on-disk block, oldest first:
+        # (t_first, t_last) or None for an empty (gap-filler) block.  Entry
+        # i covers global block ``_index_first + i``.
+        self._time_index: list[tuple[int, int] | None] = []  # guarded-by: self._lock
+        self._index_first = 0       # guarded-by: self._lock -- global index of _time_index[0]
         self.pruned_blocks = 0      # guarded-by: self._lock -- blocks dropped by retention (exact)
         self._blocks = 0            # guarded-by: self._lock -- complete blocks in the ACTIVE file
         self._bytes_written = 0     # guarded-by: self._lock -- complete bytes in the ACTIVE file
@@ -175,30 +192,43 @@ class SpillStore:
         return out
 
     @staticmethod
-    def _scan_file(path: str) -> tuple[int, int, int]:
-        """Walk one file's block headers (payloads are seeked over, not
-        read) -> ``(complete_blocks, rows, complete_bytes)``.  A truncated
-        tail — a capture cut mid-write (partial header or a header whose
-        payload runs past EOF) — is excluded, so readers never decode a
-        torn payload."""
+    def _scan_file(path: str) -> tuple[int, int, int, list]:
+        """Walk one file's block headers (payload bodies are seeked over,
+        not read) -> ``(complete_blocks, rows, complete_bytes, bounds)``.
+        ``bounds`` holds one ``(t_first, t_last)`` per complete block
+        (``None`` for empty blocks), recovered by reading exactly two i64s
+        from each ``times`` column — the capture-time index costs O(blocks)
+        seeks, never a payload decode.  A truncated tail — a capture cut
+        mid-write (partial header or a header whose payload runs past EOF)
+        — is excluded, so readers never decode a torn payload."""
         if not os.path.exists(path):
-            return 0, 0, 0
+            return 0, 0, 0, []
         size = os.path.getsize(path)
         blocks = rows = nbytes = 0
+        bounds: list[tuple[int, int] | None] = []
+        t_size = np.dtype(np.int64).itemsize
         with open(path, "rb") as f:
             while True:
                 hdr = f.read(_HEADER.size)
                 if len(hdr) < _HEADER.size:
                     break
                 (n,) = _HEADER.unpack(hdr)
-                end = f.tell() + n * _ROW_BYTES
+                start = f.tell()
+                end = start + n * _ROW_BYTES
                 if end > size:
                     break           # torn tail block: exclude from watermark
+                if n:
+                    t0 = int(np.frombuffer(f.read(t_size), np.int64)[0])
+                    f.seek(start + (n - 1) * t_size)
+                    t1 = int(np.frombuffer(f.read(t_size), np.int64)[0])
+                    bounds.append((t0, t1))
+                else:
+                    bounds.append(None)
                 f.seek(end)
                 rows += n
                 blocks += 1
                 nbytes += _HEADER.size + n * _ROW_BYTES
-        return blocks, rows, nbytes
+        return blocks, rows, nbytes, bounds
 
     # lint: disable=guarded-by(construction-time: called from __init__ only, before the store is shared with any other thread)
     def _scan_existing(self) -> None:
@@ -206,16 +236,20 @@ class SpillStore:
         filenames carry the global first-block index), then the active
         file.  Block indices resume exactly where the history ends."""
         for first, seg_path in self._segment_paths():
-            nblocks, nrows, _ = self._scan_file(seg_path)
+            nblocks, nrows, _, bounds = self._scan_file(seg_path)
             if nblocks == 0:
                 continue
             self._segments.append([seg_path, first, nblocks, nrows])
+            self._time_index.extend(bounds)
             self._rows_on_disk += nrows
             self._active_first = first + nblocks
-        nblocks, nrows, nbytes = self._scan_file(self.path)
+        nblocks, nrows, nbytes, bounds = self._scan_file(self.path)
         self._blocks = nblocks
+        self._time_index.extend(bounds)
         self._rows_on_disk += nrows
         self._bytes_written = nbytes
+        self._index_first = (self._segments[0][1] if self._segments
+                             else self._active_first)
 
     # -- write side ----------------------------------------------------------
     def _write_cols(self, cols, n: int) -> None:  # guarded-by: self._lock
@@ -249,6 +283,8 @@ class SpillStore:
         self._active_rows += n
         self._blocks += 1
         self._bytes_written += _HEADER.size + n * _ROW_BYTES
+        self._time_index.append((int(cols[0][0]), int(cols[0][n - 1]))
+                                if n else None)
 
     def _write_block(self, n: int) -> None:  # guarded-by: self._lock
         """Flush the first ``n`` buffered rows as one framed block."""
@@ -328,14 +364,23 @@ class SpillStore:
             self._prune_locked()
 
     def _prune_locked(self) -> None:  # guarded-by: self._lock
-        """Delete whole sealed segments that fall entirely below BOTH the
+        """Apply the ``retain_blocks`` count policy: prune below BOTH the
         ack floor and the retention horizon (``blocks - retain_blocks``).
-        Never touches the active file, never splits a segment, and with
-        ``retain_blocks=None`` (the default) never deletes anything."""
+        With ``retain_blocks=None`` (the default) never deletes anything."""
         if self.retain_blocks is None:
             return
         total = self._active_first + self._blocks
         keep_from = min(self._ack_floor, total - int(self.retain_blocks))
+        self._drop_segments_below(keep_from)
+
+    def _drop_segments_below(self, keep_from: int) -> int:  # guarded-by: self._lock
+        """Delete whole sealed segments whose every block index is below
+        ``keep_from``; returns the number of blocks dropped.  Never touches
+        the active file and never splits a segment — the shared pruning
+        primitive beneath both the block-count policy (:meth:`set_ack_floor`
+        / rotation) and the wall-clock age policy
+        (:meth:`prune_before_time`)."""
+        dropped = 0
         while self._segments:
             seg_path, first, nblocks, nrows = self._segments[0]
             if first + nblocks > keep_from:
@@ -343,10 +388,40 @@ class SpillStore:
             self._segments.pop(0)
             self._rows_on_disk -= nrows
             self.pruned_blocks += nblocks
+            dropped += nblocks
+            cut = (first + nblocks) - self._index_first
+            if cut > 0:
+                del self._time_index[:cut]
+                self._index_first = first + nblocks
             try:
                 os.remove(seg_path)
             except OSError:         # pragma: no cover - best-effort unlink
                 pass
+        return dropped
+
+    def prune_before_time(self, t_ns: int, *,
+                          respect_ack: bool = True) -> int:
+        """Age-based retention: drop whole sealed segments in which every
+        block's events end before ``t_ns`` (capture-time ns).  Returns the
+        number of blocks pruned.
+
+        ``respect_ack=True`` (default) additionally holds the ack floor:
+        a block the consumer has not durably acknowledged survives any age
+        budget — the producer-journal contract.  Server-side ``fleet_dir``
+        journals have no acking consumer (the server IS the consumer), so
+        their retention driver passes ``respect_ack=False``.  Works with or
+        without ``retain_blocks``; the active file is never touched, so
+        pair an age budget with ``rotate_bytes``/``rotate_age_s`` to bound
+        disk."""
+        with self._lock:
+            horizon = self._index_first
+            for b in self._time_index:
+                if b is not None and b[1] >= int(t_ns):
+                    break
+                horizon += 1
+            keep_from = min(horizon, self._ack_floor) if respect_ack \
+                else horizon
+            return self._drop_segments_below(keep_from)
 
     def append_columns(self, times, workers, deltas, tags, stacks) -> None:
         e = len(times)
@@ -503,6 +578,52 @@ class SpillStore:
         concurrent :meth:`append_block` writer: bounded to the
         flushed-byte watermark at call time."""
         yield from self._read_blocks(self._read_limit(), skip)
+
+    def time_bounds(self) -> tuple[int, int] | None:
+        """Capture-time span ``(t_first, t_last)`` over all complete
+        on-disk blocks (the resident buffer is flushed first), or ``None``
+        if nothing non-empty is on disk.  O(1) off the in-memory index —
+        no file I/O."""
+        self.spill()
+        with self._lock:
+            lo = hi = None
+            for b in self._time_index:
+                if b is not None:
+                    lo = b[0]
+                    break
+            for b in reversed(self._time_index):
+                if b is not None:
+                    hi = b[1]
+                    break
+            return None if lo is None else (lo, hi)
+
+    def iter_block_columns_window(self, t_lo: int, t_hi: int) \
+            -> Iterator[tuple[np.ndarray, ...]]:
+        """Stream only the complete blocks whose capture-time bounds
+        intersect ``[t_lo, t_hi]`` (inclusive, ns).  Blocks are written in
+        time order, so the intersecting set is one contiguous global range:
+        the in-memory index locates it and everything outside is seeked
+        over, never decoded — a windowed query over a week-long journal
+        reads only the window's blocks.  Boundary blocks may carry rows
+        outside the window; callers trim rows (the fleet feed does)."""
+        limit = self._read_limit()  # flushes the buffer -> index complete
+        with self._lock:
+            first = last = None
+            idx = self._index_first
+            for b in self._time_index:
+                if b is not None and b[1] >= t_lo and b[0] <= t_hi:
+                    if first is None:
+                        first = idx
+                    last = idx
+                idx += 1
+        if first is None:
+            return
+        remaining = last - first + 1
+        for cols in self._read_blocks(limit, skip=first):
+            if remaining <= 0:
+                return
+            remaining -= 1
+            yield cols
 
     def iter_chunks(self, num_workers: int) -> Iterator[EventLog]:
         """Stream the store back as :class:`EventLog` blocks, oldest first.

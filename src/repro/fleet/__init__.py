@@ -11,7 +11,11 @@ Turns the single-host streaming profiler into a fleet profiler:
   :class:`~repro.core.session.EventSource` that k-way-merges per-host
   streams (shard tie-break semantics, clock-offset normalization) so one
   :class:`~repro.core.session.ProfileSession` folds the whole fleet and
-  reports bottlenecks with host provenance.
+  reports bottlenecks with host provenance;
+* :mod:`repro.fleet.service` — :class:`ProfilerService`, the live HTTP
+  query API, ``/metrics`` exposition and no-dependency dashboard over
+  that session (``session.serve(addr, server=ingest)``), with
+  :class:`RetentionPolicy` age-pruning the durable journals.
 
 Offline, the same merge ingests spill files copied off the hosts::
 
@@ -81,6 +85,7 @@ for the 64-producer chaos gate).
 """
 from repro.fleet.aggregate import FleetSource, HostStream
 from repro.fleet.faults import FaultPlan
+from repro.fleet.service import ProfilerService, RetentionPolicy
 from repro.fleet.transport import IngestServer, RemoteSink, attach_remote
 from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD, RAW,
                               SUPPORTED_CODECS, WIRE_VERSION, ZLIB,
@@ -88,7 +93,8 @@ from repro.fleet.wire import (CHUNK, ChunkFrame, HELLO, MERGED_SHARD, RAW,
                               negotiate_codec, pack_frame, read_frame)
 
 __all__ = [
-    "FaultPlan", "FleetSource", "HostStream", "IngestServer", "RemoteSink",
+    "FaultPlan", "FleetSource", "HostStream", "IngestServer",
+    "ProfilerService", "RemoteSink", "RetentionPolicy",
     "attach_remote", "WIRE_VERSION", "WireError", "ChunkFrame",
     "encode_chunk", "decode_chunk", "pack_frame", "read_frame",
     "CHUNK", "HELLO", "MERGED_SHARD", "RAW", "ZLIB", "SUPPORTED_CODECS",

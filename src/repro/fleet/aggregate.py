@@ -426,7 +426,9 @@ class FleetSource(EventSource):
     def from_fleet_dir(cls, fleet_dir: str, *,
                        tags: TagRegistry | None = None,
                        stacks: StackRegistry | None = None,
-                       chunk_events: int = 1 << 16) -> "FleetSource":
+                       chunk_events: int = 1 << 16,
+                       window_ns: tuple[int, int] | None = None) \
+            -> "FleetSource":
         """Re-open an :class:`~repro.fleet.transport.IngestServer`'s
         durable per-host stores (``IngestServer(fleet_dir=...)``): one
         journal + meta sidecar per host.  The meta carries everything the
@@ -434,7 +436,12 @@ class FleetSource(EventSource):
         clock offset, and the host-local tag/stack registry entries — so
         the replayed merge resolves names and normalizes exactly like the
         live ingest did: the merged log is the union of everything the
-        server accepted."""
+        server accepted.
+
+        ``window_ns=(lo, hi)`` (inclusive, fleet time) restricts the
+        replay to that capture-time window: each journal's block index
+        seeks directly to the intersecting blocks — a windowed query over
+        a long-running fleet_dir never re-reads the full history."""
         metas = []
         for mp in sorted(glob.glob(os.path.join(str(fleet_dir),
                                                 "*.meta.json"))):
@@ -446,7 +453,7 @@ class FleetSource(EventSource):
         metas.sort(key=lambda m: int(m.get("host_index", 0)))
         src = cls(tags=tags, stacks=stacks, chunk_events=chunk_events)
         for m in metas:
-            if not os.path.exists(m["_journal_path"]):
+            if not journal_on_disk(m["_journal_path"]):
                 # a silent skip would drop the host's every row and void
                 # the merged-journals == live-report equality unnoticed
                 raise FileNotFoundError(
@@ -455,15 +462,16 @@ class FleetSource(EventSource):
             store = SpillStore.open_readonly(m["_journal_path"],
                                              chunk_events)
             nw = int(m.get("num_workers", 0))
+            off = int(m.get("clock_offset_ns", 0))
             h = src.add_host(str(m.get("host_id", "host")), nw,
                              m.get("worker_names"),
-                             clock_offset_ns=int(m.get("clock_offset_ns",
-                                                       0)),
-                             feed=_file_feed(store, nw))
+                             clock_offset_ns=off,
+                             feed=_file_feed(store, nw, window_ns, off))
             restore_host_maps(h, src.tags, src.stacks, m.get("tags"),
                               m.get("stacks"))
         src._dir_recipe = {"fleet_dir": str(fleet_dir),
-                           "chunk_events": chunk_events}
+                           "chunk_events": chunk_events,
+                           "window_ns": window_ns}
         return src
 
     @classmethod
@@ -630,9 +638,59 @@ class FleetSource(EventSource):
 # file-feed helpers
 # ---------------------------------------------------------------------------
 
-def _file_feed(store: SpillStore, num_workers: int) -> Iterator[tuple]:
-    for log in store.iter_chunks(num_workers):
-        yield (log.times, log.workers, log.deltas, log.tags, log.stacks)
+def _file_feed(store: SpillStore, num_workers: int,
+               window_ns: tuple[int, int] | None = None,
+               clock_offset_ns: int = 0) -> Iterator[tuple]:
+    """Replay a spill file as host-local column tuples.  ``window_ns``
+    (inclusive, FLEET time — i.e. post clock-offset) restricts the replay
+    to events in ``[lo, hi]``: the store's capture-time block index seeks
+    straight to the intersecting blocks (nothing outside the window is
+    decoded) and boundary blocks are row-trimmed here, in host-local time
+    (``HostStream.push`` re-applies the offset on the way in)."""
+    if window_ns is None:
+        for log in store.iter_chunks(num_workers):
+            yield (log.times, log.workers, log.deltas, log.tags, log.stacks)
+        return
+    lo = int(window_ns[0]) - int(clock_offset_ns)
+    hi = int(window_ns[1]) - int(clock_offset_ns)
+    for cols in store.iter_block_columns_window(lo, hi):
+        t = cols[0]
+        a = int(np.searchsorted(t, lo, "left"))
+        b = int(np.searchsorted(t, hi, "right"))
+        if a < b:
+            yield tuple(c[a:b] for c in cols)
+
+
+def journal_on_disk(path: str) -> bool:
+    """True when a journal left anything on disk: its base (active) file
+    or any sealed rotation segment — full rotation can retire the base
+    file entirely, leaving only ``<path>.g*.seg`` history."""
+    return bool(os.path.exists(str(path))
+                or glob.glob(glob.escape(str(path)) + ".g*.seg"))
+
+
+def fleet_dir_time_span(fleet_dir: str) -> tuple[int, int] | None:
+    """Capture-time span ``(t_min, t_max)`` of a fleet_dir in FLEET time
+    (each host's journal bounds shifted by its recorded clock offset), or
+    ``None`` when no journal holds events.  O(blocks) header seeks per
+    journal — the anchor a serving layer needs to resolve "last N seconds"
+    into an absolute window without reading any payload."""
+    lo = hi = None
+    for mp in sorted(glob.glob(os.path.join(str(fleet_dir),
+                                            "*.meta.json"))):
+        m = load_json(mp)
+        if not m or not m.get("journal"):
+            continue
+        jp = os.path.join(os.path.dirname(mp), m["journal"])
+        if not journal_on_disk(jp):
+            continue
+        b = SpillStore.open_readonly(jp).time_bounds()
+        if b is None:
+            continue
+        off = int(m.get("clock_offset_ns", 0))
+        lo = b[0] + off if lo is None else min(lo, b[0] + off)
+        hi = b[1] + off if hi is None else max(hi, b[1] + off)
+    return None if lo is None else (lo, hi)
 
 
 def _scan_num_workers(store: SpillStore) -> int:

@@ -1075,6 +1075,21 @@ class IngestServer:
         out.update(self.source.stats())
         return out
 
+    def host_journals(self) -> dict[str, SpillStore]:
+        """Snapshot of the durable per-host journals (``fleet_dir=`` mode;
+        empty otherwise) — the hook a retention driver or metrics scrape
+        walks.  Locks are taken per entry and released before return, so
+        callers may do slow work (pruning) against the returned stores
+        without holding any server lock."""
+        with self._lock:
+            hosts = list(self._hosts.items())
+        out: dict[str, SpillStore] = {}
+        for host_id, st in hosts:
+            with st.lock:
+                if st.journal is not None:
+                    out[host_id] = st.journal
+        return out
+
     # -- event loop ----------------------------------------------------------
     def _loop(self) -> None:  # lint: event-loop
         """The selector loop: accepts, reads, frame dispatch, writes, and

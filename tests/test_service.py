@@ -1,0 +1,438 @@
+"""ProfilerService: the live HTTP/JSON query API + dashboard.
+
+Acceptance properties (ISSUE 9):
+
+* ``GET /api/report`` is byte-identical to ``session.export("json")``;
+* ``GET /api/top?window=`` equals an offline re-fold of exactly that
+  window over the durable fleet_dir;
+* watch callbacks with ``payload=True`` and ``/api/stream`` frames come
+  from the same builder (key-set parity is structural);
+* age-based retention never prunes a block a served query window still
+  references.
+"""
+import json
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core import ProfileSession
+from repro.core.report import path_entries
+from repro.fleet import (FleetSource, IngestServer, ProfilerService,
+                         RetentionPolicy, attach_remote)
+from repro.fleet.aggregate import fleet_dir_time_span
+from repro.obs import http as obs_http
+from repro.obs.payload import PAYLOAD_SCHEMA_VERSION, build_watch_payload
+from repro.obs.prom import flatten_stats, render_metrics
+from tests.test_tracer import FakeClock
+
+
+def _wait(cond, timeout=10.0):
+    deadline = time.time() + timeout
+    while not cond() and time.time() < deadline:
+        time.sleep(0.01)
+    assert cond()
+
+
+def _stream_spans(s, w, clk, n, tag="x"):
+    for _ in range(n):
+        s.begin(w, tag)
+        clk.advance(1000)
+        s.end(w)
+        clk.advance(500)
+
+
+def _get(svc, path, timeout=5):
+    url = "http://%s:%d%s" % (svc.address[0], svc.address[1], path)
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, dict(r.headers), r.read()
+
+
+def _get_json(svc, path):
+    status, _, body = _get(svc, path)
+    assert status == 200
+    return json.loads(body)
+
+
+def _populate(server, tmp_path, hosts=("alpha", "beta"), spans=40):
+    """Two producers, deterministic FakeClock times, zero clock offset.
+
+    The hosts occupy DISJOINT fleet-time ranges (beta starts where alpha
+    ends), so exactly one of the two workers is ever active — every
+    slice is serialized under ``n_min=2.0`` and both hosts contribute
+    bottleneck paths (an overlapped timeline would show zero critical
+    slices and make top-N assertions vacuous)."""
+    for i, hid in enumerate(hosts):
+        clk = FakeClock()
+        clk.t = i * spans * 1500
+        s = ProfileSession(n_min=2.0, clock=clk, drain_interval=0.001)
+        w = s.register_worker("w0")
+        sink = attach_remote(s, server.address, host_id=hid,
+                             clock_offset_ns=0,
+                             journal=str(tmp_path / f"{hid}.journal"))
+        _stream_spans(s, w, clk, spans, tag=f"work-{hid}")
+        s.result()
+        sink.close()
+        assert not sink.failed and sink.dropped_chunks == 0
+
+
+@pytest.fixture
+def fleet(tmp_path):
+    fleet_dir = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=fleet_dir)
+    server.start()
+    sess = ProfileSession(server.source, n_min=2.0)
+    sess.start()
+    svc = ProfilerService(sess, server=server).start()
+    try:
+        _populate(server, tmp_path)
+        assert server.wait_idle(10), server.stats()
+        _wait(lambda: sess.stats()["events_folded"] >= 160)
+        yield svc, sess, server, fleet_dir
+    finally:
+        svc.close()
+        sess.stop()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: /api/report == export("json"), bit-equal
+# ---------------------------------------------------------------------------
+
+def test_api_report_byte_equal_to_export_json(fleet):
+    svc, sess, _, _ = fleet
+    status, headers, body = _get(svc, "/api/report")
+    assert status == 200
+    assert headers["Content-Type"].startswith("application/json")
+    assert body == sess.export("json").encode("utf-8")
+    doc = json.loads(body)
+    assert doc["schema_version"] == 3
+    assert set(doc["per_host"]) == {"alpha", "beta"}
+
+
+# ---------------------------------------------------------------------------
+# acceptance: windowed /api/top == offline re-fold of the same window
+# ---------------------------------------------------------------------------
+
+def test_api_top_windowed_matches_offline_refold(fleet):
+    svc, sess, _, fleet_dir = fleet
+    window_s = 2e-05                       # 20 us of FakeClock time
+    doc = _get_json(svc, f"/api/top?n=10&window={window_s}")
+    lo, hi = doc["window_ns"]
+    span = fleet_dir_time_span(fleet_dir)
+    assert hi == span[1] and lo == hi - int(window_s * 1e9)
+    # oracle: a fresh offline fold over exactly that window
+    src = FleetSource.from_fleet_dir(fleet_dir, window_ns=(lo, hi))
+    oracle = ProfileSession(src, n_min=2.0).result(10)
+    want = path_entries(oracle, 10)
+    assert want, "window must cover real bottleneck paths"
+    got = [{k: e[k] for k in want[0]} for e in doc["entries"]]
+    assert got == want
+    # the window genuinely subsets the capture
+    full = _get_json(svc, "/api/top?n=10")
+    assert sum(e["slices"] for e in doc["entries"]) < \
+        sum(e["slices"] for e in full["entries"])
+
+
+def test_api_top_deltas_against_previous_poll(fleet):
+    svc, _, _, _ = fleet
+    first = _get_json(svc, "/api/top?n=5")
+    assert first["baseline"] is False
+    assert all(e["delta_cmetric_s"] is None for e in first["entries"])
+    second = _get_json(svc, "/api/top?n=5")
+    assert second["baseline"] is True
+    for e in second["entries"]:
+        assert e["delta_cmetric_s"] is not None     # steady capture: ~0
+        assert abs(e["delta_cmetric_s"]) < 1e-6
+        assert e["prev_rank"] == e["rank"]
+
+
+def test_api_top_window_requires_fleet_dir(tmp_path):
+    s = ProfileSession(n_min=1.0, clock=FakeClock())
+    w = s.register_worker("w")
+    s.begin(w, "t")
+    s.end(w)
+    svc = ProfilerService(s).start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(svc, "/api/top?window=1")
+        assert ei.value.code == 400
+    finally:
+        svc.close()
+        s.result()
+
+
+# ---------------------------------------------------------------------------
+# hosts drill-down
+# ---------------------------------------------------------------------------
+
+def test_api_hosts_and_drilldown(fleet):
+    svc, _, _, _ = fleet
+    doc = _get_json(svc, "/api/hosts")
+    assert set(doc["hosts"]) == {"alpha", "beta"}
+    assert doc["ingest"]["lost_chunks"] == 0
+    assert doc["health"]["hosts"] == 2
+    one = _get_json(svc, "/api/hosts/alpha")
+    assert one["host_id"] == "alpha"
+    assert one["workers"] == 1 and one["worker_lanes"][0]["name"] \
+        == "alpha/w0"
+    assert one["stream"]["rows_in"] == 80
+    assert one["journal"]["blocks"] >= 1
+    assert one["journal"]["time_bounds_ns"][0] >= 0
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(svc, "/api/hosts/nope")
+    assert ei.value.code == 404
+
+
+# ---------------------------------------------------------------------------
+# /metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_exposition(fleet):
+    svc, _, _, _ = fleet
+    _get(svc, "/api/top?n=3")              # count at least one request
+    status, headers, body = _get(svc, "/metrics")
+    text = body.decode()
+    assert status == 200 and "0.0.4" in headers["Content-Type"]
+    for needle in (
+        "gapp_session_events_folded 160",
+        "gapp_fleet_hosts 2",
+        "gapp_ingest_lost_chunks 0",
+        'gapp_journal_bytes{host="alpha"}',
+        'gapp_journal_bytes{host="beta"}',
+        'gapp_service_requests{route="/api/top"}',
+        "gapp_service_snapshot_seconds_last",
+        "gapp_service_fold_events_per_s",
+    ):
+        assert needle in text, f"missing {needle!r}\n{text}"
+    # exposition shape: every sample line parses as name{...} value
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            assert line.startswith(("# TYPE ", "# HELP "))
+        else:
+            name, value = line.rsplit(" ", 1)
+            float(value)
+            assert name[0].isalpha()
+
+
+def test_prom_flatten_and_render_unit():
+    samples = list(flatten_stats("p", {
+        "a": 2, "flag": True, "skip_str": "x", "skip_none": None,
+        "nest": {"b": 1.5}, "9bad name": 7,
+    }, labels=None))
+    assert ("p_a", None, 2.0) in samples
+    assert ("p_flag", None, 1.0) in samples
+    assert ("p_nest_b", None, 1.5) in samples
+    assert ("p__9bad_name", None, 7.0) in samples
+    assert not any("skip" in s[0] for s in samples)
+    text = render_metrics(samples + [("p_a", {"h": 'q"x'}, 3)])
+    assert '# TYPE p_a gauge' in text
+    assert 'p_a{h="q\\"x"} 3' in text
+    assert text.index("p_a") < text.index("p_flag")     # sorted
+
+
+# ---------------------------------------------------------------------------
+# /api/stream and the shared watch payload
+# ---------------------------------------------------------------------------
+
+def test_api_stream_frames_match_watch_payload(fleet):
+    svc, sess, _, _ = fleet
+    url = "http://%s:%d/api/stream?every=0.05&n=4" % svc.address
+    with urllib.request.urlopen(url, timeout=5) as r:
+        assert r.headers["Content-Type"].startswith("application/x-ndjson")
+        frames = []
+        while len(frames) < 2:
+            ln = r.readline().strip()
+            if ln:
+                frames.append(json.loads(ln))
+    direct = build_watch_payload(sess, top_n=4)
+    for f in frames:
+        assert f["schema_version"] == PAYLOAD_SCHEMA_VERSION
+        assert set(f) == set(direct)                    # same builder
+        assert set(f["per_host"]) == {"alpha", "beta"}
+        assert len(f["top"]) <= 4
+        assert f["health"]["shed_chunks"] == 0
+
+
+def test_watch_payload_has_host_lanes(tmp_path):
+    server = IngestServer()
+    server.start()
+    sess = ProfileSession(server.source, n_min=2.0)
+    frames = []
+    sess.watch(frames.append, every=0.0, payload=True)
+    sess.start()
+    try:
+        _populate(server, tmp_path)
+        assert server.wait_idle(10)
+        _wait(lambda: sess.stats()["events_folded"] >= 160)
+        _wait(lambda: len(frames) >= 1
+              and frames[-1]["events_folded"] >= 160)
+        f = frames[-1]          # grabbed pre-stop: source still accepting
+    finally:
+        sess.stop()
+        server.close()
+    assert f["worker_hosts"] == ["alpha", "beta"]
+    assert set(f["per_host"]) == {"alpha", "beta"}
+    assert f["per_host"]["alpha"]["workers"] == 1
+    assert f["health"]["accepting"] is True
+    assert f["mode"] == "offline"
+    assert [e["path"] for e in f["top"]]
+
+
+def test_watch_exporter_payload_flag(tmp_path):
+    clk = FakeClock()
+    s = ProfileSession(n_min=1.0, clock=clk, drain_interval=0.001)
+    w = s.register_worker("w")
+    frames, reports = [], []
+    s.export("watch", callback=frames.append, every=0.0, payload=True)
+    s.export("watch", callback=reports.append, every=0.0)
+    _stream_spans(s, w, clk, 5)
+    s.result()
+    assert frames and isinstance(frames[-1], dict)
+    assert frames[-1]["total_slices"] == 5
+    assert frames[-1]["worker_hosts"] == []     # single host: slim form
+    assert reports and not isinstance(reports[-1], dict)
+
+
+# ---------------------------------------------------------------------------
+# dashboard + protocol errors
+# ---------------------------------------------------------------------------
+
+def test_dashboard_html(fleet):
+    svc, _, _, _ = fleet
+    status, headers, body = _get(svc, "/")
+    assert status == 200
+    assert headers["Content-Type"].startswith("text/html")
+    for needle in (b"GAPP fleet profiler", b"/api/top", b"/api/hosts",
+                   b"per-host lanes"):
+        assert needle in body
+
+
+def test_http_errors(fleet):
+    svc, _, _, _ = fleet
+    for path, code in [("/api/nope", 404), ("/api/top?n=zap", 400),
+                       ("/api/top?window=-2", 400)]:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(svc, path)
+        assert ei.value.code == code, path
+        assert ei.value.read().startswith(b"{")        # JSON error body
+    req = urllib.request.Request(
+        "http://%s:%d/api/report" % svc.address, data=b"x=1")  # POST
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=5)
+    assert ei.value.code == 405
+    assert svc.stats()["http_errors"] >= 4
+
+
+def test_http_parse_request_unit():
+    assert obs_http.parse_request(b"GET /x HTTP/1.1\r\n") is None  # partial
+    req, used = obs_http.parse_request(
+        b"GET /api/top?n=5&window=1.5 HTTP/1.1\r\nHost: h\r\n"
+        b"X-Thing: v\r\n\r\ntrailing")
+    assert used == len(b"GET /api/top?n=5&window=1.5 HTTP/1.1\r\n"
+                       b"Host: h\r\nX-Thing: v\r\n\r\n")
+    assert (req.method, req.path) == ("GET", "/api/top")
+    assert req.query == {"n": "5", "window": "1.5"}
+    assert req.headers["x-thing"] == "v"
+    assert req.query_int("n") == 5 and req.query_float("window") == 1.5
+    assert req.query_int("n", lo=10) == 10              # clamped
+    assert req.query_int("missing", 7) == 7
+    with pytest.raises(obs_http.HttpError):
+        obs_http.parse_request(b"FTP JUNK\r\n\r\n")
+    with pytest.raises(obs_http.HttpError):
+        obs_http.parse_request(b"G" * (obs_http.MAX_REQUEST_BYTES + 1))
+
+
+# ---------------------------------------------------------------------------
+# offline mode + session.serve wiring
+# ---------------------------------------------------------------------------
+
+def test_from_fleet_dir_offline_service(fleet):
+    svc, sess, _, fleet_dir = fleet
+    off = ProfilerService.from_fleet_dir(fleet_dir, n_min=2.0)
+    off.start()
+    try:
+        # the offline service's /api/report is byte-equal to folding the
+        # same fleet_dir by hand (live per-host criticality can differ:
+        # the incremental fold judged alpha before beta ever attached)
+        status, _, body = _get(off, "/api/report")
+        osess = ProfileSession(FleetSource.from_fleet_dir(fleet_dir),
+                               n_min=2.0)
+        osess.result()
+        assert status == 200 and body == osess.export("json").encode()
+        doc = json.loads(body)
+        live = json.loads(_get(svc, "/api/report")[2])
+        assert doc["total_slices"] == live["total_slices"]
+        assert set(doc["per_host"]) == set(live["per_host"])
+        # windowed queries work offline too (same journals)
+        top = _get_json(off, "/api/top?n=5&window=2e-05")
+        assert top["entries"]
+        hosts = _get_json(off, "/api/hosts")
+        assert set(hosts["hosts"]) == {"alpha", "beta"}
+        assert "ingest" not in hosts            # no live server attached
+        assert hosts["mode"] == "offline"
+        met = _get(off, "/metrics")[2].decode()
+        assert 'gapp_journal_bytes{host="alpha"}' in met
+    finally:
+        off.close()
+
+
+def test_session_serve_returns_started_service(fleet):
+    _, sess, server, _ = fleet
+    svc2 = sess.serve(server=server)
+    try:
+        assert svc2.address[1] > 0
+        assert _get_json(svc2, "/api/hosts")["ingest"]["lost_chunks"] == 0
+    finally:
+        svc2.close()
+
+
+# ---------------------------------------------------------------------------
+# retention: age budget prunes sealed history, never a served window
+# ---------------------------------------------------------------------------
+
+def test_retention_prunes_aged_segments(tmp_path):
+    fleet_dir = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=fleet_dir, fleet_rotate_bytes=1)
+    server.start()
+    sess = ProfileSession(server.source, n_min=2.0)
+    sess.start()
+    svc = ProfilerService(
+        sess, server=server,
+        retention=RetentionPolicy(max_age_s=1e-05, sweep_interval_s=60))
+    svc.start()
+    try:
+        clk = FakeClock()
+        s = ProfileSession(n_min=2.0, clock=clk, drain_interval=0.001)
+        w = s.register_worker("w")
+        sink = attach_remote(s, server.address, host_id="h",
+                             clock_offset_ns=0)
+        for _ in range(10):                 # 10 explicitly-synced batches
+            _stream_spans(s, w, clk, 4)     # -> 10 chunks -> 10 one-
+            s.tracer.sync()                 # block rotated segments
+        s.result()
+        sink.close()
+        assert server.wait_idle(10)
+        store = server.host_journals()["h"]
+        assert store.segments >= 3          # rotated history
+        before = store.blocks
+        pruned = svc.retention_sweep()      # budget: newest 10 us only
+        assert pruned > 0
+        assert store.pruned_blocks == pruned
+        # surviving history starts inside the capture, not at 0, and the
+        # newest block always survives (the budget anchors on it)
+        tb = store.time_bounds()
+        assert tb[0] > 0
+        assert tb[1] == 10 * 4 * 1500 - 500
+        assert store.first_block == pruned
+        assert store.blocks == before       # global indices untouched
+        # a served window holds retention back: ask for the full span,
+        # then shrink the budget to nothing — the sweep keeps the window
+        svc2_doc = _get_json(svc, "/api/top?n=5&window=1")  # 1 s >> span
+        assert svc2_doc["entries"]
+        assert svc.retention_sweep() == 0   # guard = max(budget, window)
+    finally:
+        svc.close()
+        sess.stop()
+        server.close()
