@@ -97,7 +97,7 @@ def run_service(producers: int = 2, spans: int = 200,
         # gate 1: the live API IS the canonical exporter
         assert body == sess.export("json").encode("utf-8")
         rep = json.loads(body)
-        assert rep["schema_version"] == 3, rep["schema_version"]
+        assert rep["schema_version"] == 4, rep["schema_version"]
 
         # tail window: a third of the fleet-time span, always populated
         window_s = producers * spans * 1500 / 3 / 1e9

@@ -140,10 +140,33 @@ def smoke_service(producers: int, out: str) -> dict:
     return res
 
 
+def smoke_whatif(out: str) -> dict:
+    """What-if accuracy smoke: counterfactual projections checked against
+    constructible ground truth — MoE hot-expert removal and an injected
+    serial optimizer step, both with known true gains, plus /api/whatif
+    byte-consistency with the offline engine (``python -m benchmarks.run
+    --smoke whatif`` -> BENCH_whatif.json).  GATED inside the benchmark:
+    projected-vs-measured relative error above 15% or a wire/offline
+    byte mismatch raises."""
+    from benchmarks import bench_whatif
+    res = bench_whatif.run_whatif()
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# whatif: moe projected {res['moe_projected_speedup']:.3f}x vs "
+          f"measured {res['moe_actual_speedup']:.3f}x "
+          f"(err {res['moe_rel_err'] * 100:.1f}%), pipeline err "
+          f"{res['pipeline_rel_err'] * 100:.1f}%, service byte_equal="
+          f"{res['service_byte_equal']} "
+          f"({res['service_whatif_ms']:.2f} ms) -> {out}")
+    return res
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", choices=["detect", "probe", "session",
-                                        "fleet", "chaos", "service"],
+                                        "fleet", "chaos", "service",
+                                        "whatif"],
                     help="run one fast smoke benchmark and write a JSON "
                          "artifact instead of the full CSV harness")
     ap.add_argument("--producers", type=int, default=2,
@@ -178,6 +201,9 @@ def main() -> None:
         return
     if args.smoke == "service":
         smoke_service(args.producers, args.out or "BENCH_service.json")
+        return
+    if args.smoke == "whatif":
+        smoke_whatif(args.out or "BENCH_whatif.json")
         return
 
     from benchmarks import (bench_balance, bench_cmetric, bench_detect,

@@ -47,6 +47,8 @@ _DEFAULT_KEYS = {
               "+wire_compression_ratio"),
     "chaos": ("+ingest_events_per_s",),
     "service": ("report_ms", "top_window_ms", "metrics_ms"),
+    "whatif": ("whatif_fold_ms", "service_whatif_ms", "moe_rel_err",
+               "pipeline_rel_err"),
 }
 
 
@@ -87,7 +89,7 @@ def compare(base: dict, new: dict, keys: tuple[str, ...],
 def _series_kind(path: str) -> str:
     base = os.path.basename(path)
     for kind in ("probe", "detect", "session", "fleet", "chaos",
-                 "service"):
+                 "service", "whatif"):
         if kind in base:
             return kind
     return os.path.splitext(base)[0] or "bench"

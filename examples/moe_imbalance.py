@@ -42,7 +42,9 @@ def profile_loads(loads: np.ndarray, steps: int = 20,
     for _ in range(steps):
         for e in range(len(loads)):
             if loads[e] > 0:
-                g.ingest(t, wids[e], +1, "moe/expert_ffn")
+                # per-expert tags: the profile (and the what-if engine)
+                # can name exactly which expert serializes the all-to-all
+                g.ingest(t, wids[e], +1, f"moe/expert{e}")
         dur = loads * ns_per_token
         for e in np.argsort(dur):
             if loads[e] > 0:
@@ -66,6 +68,23 @@ def main():
           "share is the profiler's native view of router imbalance. "
           "The trainer exports expert_load each step, so this profile is "
           "available live during training.")
+
+    # causal what-if vs constructible ground truth: project the gain from
+    # dropping the hot expert's work, then *measure* it by re-profiling
+    # with that expert's load zeroed — the projection must match
+    loads, ne = expert_loads(2.5)
+    g, _ = profile_loads(loads)
+    rep = g.result()
+    hot = int(np.argmax(rep.per_worker))
+    wi = rep.what_if(f"moe/expert{hot}", shrink=0.0)
+    fixed = loads.copy()
+    fixed[hot] = 0
+    g2, _ = profile_loads(fixed)
+    actual = rep.total_time / g2.result().total_time
+    err = abs(wi.speedup - actual) / actual
+    print(f"\nwhat-if: drop expert{hot} -> projected {wi.speedup:.3f}x "
+          f"end-to-end; measured without it {actual:.3f}x "
+          f"(error {err * 100:.1f}%)")
 
 
 if __name__ == "__main__":

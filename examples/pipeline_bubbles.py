@@ -14,7 +14,8 @@ from repro.core import ProfileSession, imbalance_stats
 from repro.pipeline.gpipe import schedule_intervals
 
 
-def profile_schedule(n_stages: int, n_micro: int):
+def profile_schedule(n_stages: int, n_micro: int,
+                     serial_update_ns: int = 0):
     g = ProfileSession(n_min=None)
     wids = [g.register_worker(f"stage{s}", "stage") for s in range(n_stages)]
     events = []
@@ -24,6 +25,13 @@ def profile_schedule(n_stages: int, n_micro: int):
         events.append((round(t1 * 1e9), s, -1))
     for t, s, d in sorted(events):
         g.ingest(t, wids[s], d, "stage_step")
+    if serial_update_ns:
+        # injected bottleneck with ground truth by construction: a serial
+        # optimizer step on stage0 after the pipeline drains — removing
+        # it is worth exactly serial_update_ns of wall clock
+        t_end = max(t for t, _, _ in events)
+        g.ingest(t_end, wids[0], +1, "optimizer/serial_update")
+        g.ingest(t_end + int(serial_update_ns), wids[0], -1)
     pw = g.tracer.per_worker_cm()
     span = (n_stages + n_micro - 1) * 1e-3
     busy = n_stages * n_micro * 1e-3
@@ -50,6 +58,19 @@ def main():
     assert abs(total - span) < 1e-6
     print(f"   (conservation check: Σcm+idle = {total * 1e3:.3f} ms "
           f"= schedule span {span * 1e3:.3f} ms)")
+    # causal what-if: inject a 2 ms serial optimizer step and ask what
+    # fixing it is worth — the true gain is its duration, by construction
+    serial_ns = 2_000_000
+    _, _, g = profile_schedule(8, 8, serial_update_ns=serial_ns)
+    rep = g.result()
+    wi = rep.what_if("optimizer/serial_update", shrink=0.0)
+    truth_s = rep.total_time - serial_ns / 1e9
+    print(f"\nwhat-if: remove the {serial_ns / 1e6:.2f} ms serial "
+          f"optimizer step -> projected {wi.speedup:.3f}x "
+          f"({rep.total_time * 1e3:.2f} -> {wi.projected_total_s * 1e3:.2f} "
+          f"ms); ground truth {truth_s * 1e3:.2f} ms")
+    assert abs(wi.projected_total_s - truth_s) < 1e-9, (
+        wi.projected_total_s, truth_s)
 
 
 if __name__ == "__main__":

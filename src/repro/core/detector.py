@@ -69,10 +69,32 @@ class BottleneckReport:
     # host provenance (fleet ingest): worker_hosts[wid] names the host that
     # produced worker ``wid``; None for single-host sessions
     worker_hosts: list[str] | None = None
+    # counterfactual replay handle (repro.core.whatif.ReplaySpec) attached
+    # by detect()/detect_offline()/offline snapshots; None when the capture
+    # is not recoverable (e.g. build_report() called directly)
+    replay: object | None = dataclasses.field(default=None, repr=False)
 
     @property
     def critical_ratio(self) -> float:     # paper Table 2 "CR" column
         return self.total_critical / max(self.total_slices, 1)
+
+    # -- causal what-if (repro.core.whatif) -----------------------------------
+    def what_if(self, tag=None, *, shrink: float = 0.0, host=None,
+                worker=None, path=None, top_n: int = 10):
+        """Counterfactual projection: replay the fold with the target's
+        critical slices shrunk by ``shrink`` (0.0 == removed) and report
+        projected speedup, the new ranking, and per-worker load shift.
+        See :func:`repro.core.whatif.what_if`."""
+        from repro.core import whatif as whatif_lib
+        return whatif_lib.what_if(self, tag, shrink=shrink, host=host,
+                                  worker=worker, path=path, top_n=top_n)
+
+    def sensitivity(self, params: dict | None = None, *, top_k: int = 5):
+        """Perturbation sweep over detection parameters (``n_min`` /
+        sampling cadence) reporting rank stability.  See
+        :func:`repro.core.whatif.sensitivity`."""
+        from repro.core import whatif as whatif_lib
+        return whatif_lib.sensitivity(self, params, top_k=top_k)
 
     def tag_name(self, tid: int) -> str:
         if 0 <= tid < len(self.tag_names):
@@ -377,7 +399,7 @@ def detect(
     # keyword only when asked: LockedTracer's snapshot has no budget
     snap = tracer.snapshot(budgeted=True) if budgeted else tracer.snapshot()
     crit = snap["critical"]
-    return build_report(
+    rep = build_report(
         crit, samples, tracer.stacks, n_min,
         per_worker=snap["per_worker"],
         worker_names=tracer.worker_names(),
@@ -388,6 +410,11 @@ def detect(
         total_time=snap["total_time"],
         top_n=top_n,
     )
+    from repro.core.whatif import ReplaySpec
+    rep.replay = ReplaySpec(
+        log_provider=tracer.freeze, tags=tracer.tags, stacks=tracer.stacks,
+        n_min=n_min, samples=samples, worker_names=tracer.worker_names())
+    return rep
 
 
 def detect_offline(
@@ -419,6 +446,7 @@ def detect_offline(
     set.  Results are identical to the whole-log path (bit-equal for the
     float64 ``numpy`` backend).
     """
+    raw_log = log
     if chunk_events is not None and len(log):
         from repro.core.cmetric import FoldCarry
         from repro.core.events import sanitize_chunk
@@ -448,7 +476,7 @@ def detect_offline(
         per_worker, idle, total = res.per_worker, res.idle_time, res.total_time
         num_slices = res.num_slices
     caps = backends_lib.get_backend(backend).capabilities
-    return build_report(
+    rep = build_report(
         crit, samples, stacks, n_min,
         per_worker=per_worker,
         worker_names=worker_names or [f"w{i}" for i in range(log.num_workers)],
@@ -460,6 +488,12 @@ def detect_offline(
         top_n=top_n,
         use_pallas_hist="fused" in caps and _pallas_hist_native(),
     )
+    from repro.core.whatif import ReplaySpec
+    rep.replay = ReplaySpec(
+        log_provider=lambda: raw_log, tags=tags, stacks=stacks, n_min=n_min,
+        backend=backend, samples=samples, sample_dt_ns=sample_dt_ns,
+        worker_names=worker_names, chunk_events=chunk_events)
+    return rep
 
 
 def critical_slices_from_result(log, res, n_min: float) -> list[CriticalSlice]:

@@ -127,7 +127,10 @@ def _export_text(rep, *, session=None, **kw) -> str:
 
 @register_exporter("json", capabilities={"machine", "versioned"})
 def _export_json(rep, *, session=None, **kw) -> str:
-    return to_json(rep)
+    """``what_if=N`` (optionally ``what_if_shrink=``) appends the
+    counterfactual projections block — computed only on request, so the
+    default export (and ``/api/report`` byte-equality) costs nothing."""
+    return to_json(rep, **kw)
 
 
 @register_exporter("chrome", capabilities={"trace"})

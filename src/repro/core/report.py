@@ -15,9 +15,13 @@ from repro.core.detector import BottleneckReport
 
 
 def render_text(rep: BottleneckReport, max_paths: int | None = None,
-                max_tags: int = 5, bar_width: int = 40) -> str:
+                max_tags: int = 5, bar_width: int = 40,
+                what_if: int | None = None,
+                what_if_shrink: float = 0.0) -> str:
     """Human-readable profile: ranked call paths with sampled-tag frequency
-    tables (Figure 7) followed by the per-worker CMetric chart (Figure 4/5)."""
+    tables (Figure 7) followed by the per-worker CMetric chart (Figure 4/5).
+    ``what_if=N`` appends counterfactual projections for the top-N paths
+    (what removing each path's critical work would be worth)."""
     lines = []
     lines.append("=" * 72)
     lines.append("GAPP bottleneck profile")
@@ -78,14 +82,25 @@ def render_text(rep: BottleneckReport, max_paths: int | None = None,
         n = int(bar_width * v / top) if top > 0 else 0
         name = rep.worker_names[wid] if wid < len(rep.worker_names) else str(wid)
         lines.append(f"  {name:>24s} {v * 1e3:12.3f} ms |{'#' * n}")
+    if what_if:
+        lines.append("")
+        lines.append(f"what-if projections (shrink={what_if_shrink:g})")
+        for e in what_if_entries(rep, what_if, what_if_shrink):
+            sp = (f"{e['speedup']:.3f}x" if e["speedup"] is not None
+                  else "inf")
+            lines.append(f"  fix #{e['rank']} {e['path']}: {sp} "
+                         f"end-to-end (saves {e['saved_s'] * 1e3:.3f} ms)")
     return "\n".join(lines)
 
 
 # Version of the to_json layout; parsers should check it before relying on
 # key positions.  2 == schema_version introduced (layout otherwise as v1);
 # 3 == additive host-provenance keys (worker_hosts / per_host, present only
-# for fleet reports — v2 parsers keep working).
-JSON_SCHEMA_VERSION = 3
+# for fleet reports — v2 parsers keep working);
+# 4 == additive "what_if" key (counterfactual projections, present only
+# when the export is asked for them via ``what_if=N`` — v3 parsers keep
+# working).
+JSON_SCHEMA_VERSION = 4
 
 
 def path_entries(rep: BottleneckReport,
@@ -109,12 +124,37 @@ def path_entries(rep: BottleneckReport,
     ]
 
 
-def to_json(rep: BottleneckReport) -> str:
+def what_if_entries(rep: BottleneckReport, top_n: int,
+                    shrink: float = 0.0) -> list[dict]:
+    """Counterfactual projections for the top-N ranked paths — the
+    ``what_if=N`` sections of the text/json exporters.  Needs the
+    report's replay handle (raises ``RuntimeError`` without one)."""
+    out = []
+    for rank in range(1, min(int(top_n), len(rep.paths)) + 1):
+        wi = rep.what_if(path=rank, shrink=shrink)
+        out.append({
+            "rank": rank,
+            "path": wi.selection["value"],
+            "shrink": wi.shrink,
+            "speedup": wi.to_doc()["speedup"],
+            "saved_s": wi.saved_s,
+            "projected_total_s": wi.projected_total_s,
+        })
+    return out
+
+
+def to_json(rep: BottleneckReport, what_if: int | None = None,
+            what_if_shrink: float = 0.0) -> str:
     ct = rep.critical_table
     host_fields = {}
     if rep.worker_hosts:
         host_fields = {"worker_hosts": list(rep.worker_hosts),
                        "per_host": rep.per_host()}
+    extra = {}
+    if what_if:
+        extra["what_if"] = {"shrink": what_if_shrink,
+                            "projections": what_if_entries(
+                                rep, what_if, what_if_shrink)}
     return json.dumps({
         "schema_version": JSON_SCHEMA_VERSION,
         **host_fields,
@@ -130,6 +170,7 @@ def to_json(rep: BottleneckReport) -> str:
         "per_worker_cmetric_s": rep.per_worker.tolist(),
         "worker_names": rep.worker_names,
         "paths": path_entries(rep),
+        **extra,
     }, indent=2)
 
 

@@ -533,7 +533,7 @@ class ProfileSession:
         with self._fold_lock:
             crit = self._crit.table()
             st = self._carry.state()
-        return detector_lib.build_report(
+        rep = detector_lib.build_report(
             crit, self._samples, self.stacks, self._resolved_n_min(),
             per_worker=st["per_worker"],
             worker_names=self.source.worker_names(),
@@ -546,6 +546,19 @@ class ProfileSession:
             use_pallas_hist=self._use_pallas_hist(),
             worker_hosts=self.source.worker_hosts(),
         )
+        if hasattr(self.source, "full_log"):
+            # counterfactual replay handle (lazy: nothing is read until a
+            # what_if/sensitivity query actually runs)
+            from repro.core.whatif import ReplaySpec
+            rep.replay = ReplaySpec(
+                log_provider=self.source.full_log, tags=self.tags,
+                stacks=self.stacks, n_min=self._resolved_n_min(),
+                backend=self.fold_backend, samples=self._samples,
+                sample_dt_ns=self._sample_dt_ns,
+                worker_names=self.source.worker_names(),
+                worker_hosts=self.source.worker_hosts(),
+                chunk_events=self.chunk_events)
+        return rep
 
     def result(self, top_n: int | None = None):
         """The final report: quiesce (stop probe + worker), fold everything
@@ -596,8 +609,8 @@ class ProfileSession:
     def serve(self, addr: tuple[str, int] = ("127.0.0.1", 0), **kw):
         """Start a :class:`repro.fleet.service.ProfilerService` over this
         session: the live HTTP query API + dashboard (``/``,
-        ``/api/report``, ``/api/top``, ``/api/hosts``, ``/api/stream``,
-        ``/metrics``).  Keyword arguments (``server=``, ``fleet_dir=``,
+        ``/api/report``, ``/api/top``, ``/api/whatif``, ``/api/hosts``,
+        ``/api/stream``, ``/metrics``).  Keyword arguments (``server=``, ``fleet_dir=``,
         ``retention=``, ``top_n=``) pass through; returns the started
         service — ``close()`` it when done (the session is untouched)."""
         from repro.fleet.service import ProfilerService

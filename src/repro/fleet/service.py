@@ -13,6 +13,10 @@ browser at a running fleet" product shape over everything the durable
   previous poll; ``window=<seconds>`` answers from an incremental
   re-fold of only the journal blocks whose capture-time bounds intersect
   the window (the SpillStore block index — never a full history read);
+* ``GET /api/whatif?tag=&shrink=`` — causal what-if: a counterfactual
+  re-fold with the selected target's critical slices shrunk/removed
+  (``host=`` / ``worker=`` / ``path=<rank>`` select too), byte-identical
+  to ``report.what_if(...).to_json()`` on the same capture;
 * ``GET /api/hosts`` / ``GET /api/hosts/<id>`` — per-host lanes from
   ``BottleneckReport.per_host()`` plus stream/journal/ingest health;
 * ``GET /api/stream`` — chunked JSON-lines push of the same payload the
@@ -180,6 +184,8 @@ class ProfilerService:
         self._snap_seconds_last = 0.0       # guarded-by: self._lock
         self._window_folds = 0              # guarded-by: self._lock
         self._window_fold_seconds_sum = 0.0  # guarded-by: self._lock
+        self._whatif_folds = 0              # guarded-by: self._lock
+        self._whatif_fold_seconds_sum = 0.0  # guarded-by: self._lock
         self._max_window_s = 0.0            # guarded-by: self._lock
         self._retention_pruned = 0          # guarded-by: self._lock
         self._retention_errors = 0          # guarded-by: self._lock
@@ -285,6 +291,8 @@ class ProfilerService:
           ``/metrics`` "snapshot latency" series);
         * ``window_folds`` / ``window_fold_seconds_sum`` — windowed
           ``/api/top`` incremental re-folds;
+        * ``whatif_folds`` / ``whatif_fold_seconds_sum`` —
+          counterfactual ``/api/whatif`` re-folds;
         * ``max_window_s`` — largest window ever served (retention holds
           at least this much history);
         * ``retention_pruned_blocks`` / ``retention_errors`` — age-based
@@ -303,6 +311,8 @@ class ProfilerService:
                 "snapshot_seconds_last": self._snap_seconds_last,
                 "window_folds": self._window_folds,
                 "window_fold_seconds_sum": self._window_fold_seconds_sum,
+                "whatif_folds": self._whatif_folds,
+                "whatif_fold_seconds_sum": self._whatif_fold_seconds_sum,
                 "max_window_s": self._max_window_s,
                 "retention_pruned_blocks": self._retention_pruned,
                 "retention_errors": self._retention_errors,
@@ -411,8 +421,8 @@ class ProfilerService:
         path = req.path.rstrip("/") or "/"
         if path.startswith("/api/hosts/"):
             return "/api/hosts/<id>"
-        if path in ("/", "/api/report", "/api/top", "/api/hosts",
-                    "/api/stream", "/metrics"):
+        if path in ("/", "/api/report", "/api/top", "/api/whatif",
+                    "/api/hosts", "/api/stream", "/metrics"):
             return path
         return "<other>"
 
@@ -428,6 +438,8 @@ class ProfilerService:
             return http.response(200, self._report_json())
         if path == "/api/top":
             return http.json_response(200, self._top_doc(req))
+        if path == "/api/whatif":
+            return http.json_response(200, self._whatif_doc(req))
         if path == "/api/hosts":
             return http.json_response(200, self._hosts_doc())
         if path.startswith("/api/hosts/"):
@@ -615,6 +627,40 @@ class ProfilerService:
             self._window_folds += 1
             self._window_fold_seconds_sum += dt
         return rep
+
+    def _whatif_doc(self, req: http.Request) -> dict:
+        """``GET /api/whatif?tag=&shrink=`` (or ``host=`` / ``worker=`` /
+        ``path=<rank>``): one counterfactual re-fold over the session's
+        capture.  The body is exactly ``report.what_if(...).to_doc()``
+        through the same ``json.dumps(doc, indent=2)`` as the offline
+        ``to_json()``, so the wire bytes match an offline what-if on the
+        same fleet_dir byte-for-byte."""
+        shrink = req.query_float("shrink", 0.0)
+        if shrink is None or not 0.0 <= shrink <= 1.0:
+            raise http.HttpError(400, "shrink must be in [0, 1]")
+        tag = req.query.get("tag")
+        host = req.query.get("host")
+        worker = req.query.get("worker")
+        path_rank = req.query_int("path")
+        if sum(v is not None for v in (tag, host, worker, path_rank)) != 1:
+            raise http.HttpError(
+                400, "select exactly one target: tag=, host=, worker= "
+                "or path=<rank>")
+        top_n = req.query_int("n", self.top_n, lo=1, hi=1000)
+        rep = self._snapshot_timed(None)
+        t0 = time.perf_counter()
+        try:
+            wi = rep.what_if(tag, shrink=shrink, host=host, worker=worker,
+                             path=path_rank, top_n=top_n)
+        except ValueError as e:
+            raise http.HttpError(404, str(e)) from None
+        except RuntimeError as e:
+            raise http.HttpError(400, str(e)) from None
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._whatif_folds += 1
+            self._whatif_fold_seconds_sum += dt
+        return wi.to_doc()
 
     def _hosts_doc(self) -> dict:
         rep = self._snapshot_timed(None)

@@ -16,17 +16,26 @@ from repro.lint.engine import Baseline, run_lint
 DEFAULT_BASELINE = "lint-baseline.json"
 
 
-def collect_files(paths: list[str]) -> list[str]:
+def collect_files(paths: list[str],
+                  exclude: list[str] | None = None) -> list[str]:
+    skip = [os.path.normpath(e) for e in (exclude or [])]
+
+    def excluded(p: str) -> bool:
+        q = os.path.normpath(p)
+        return any(q == e or q.startswith(e + os.sep) for e in skip)
+
     files: list[str] = []
     for path in paths:
         if os.path.isdir(path):
             for root, dirs, names in os.walk(path):
                 dirs[:] = sorted(d for d in dirs
-                                 if d not in ("__pycache__", ".git"))
+                                 if d not in ("__pycache__", ".git")
+                                 and not excluded(os.path.join(root, d)))
                 for name in sorted(names):
-                    if name.endswith(".py"):
+                    if name.endswith(".py") \
+                            and not excluded(os.path.join(root, name)):
                         files.append(os.path.join(root, name))
-        else:
+        elif not excluded(path):
             files.append(path)
     return files
 
@@ -44,13 +53,18 @@ def main(argv: list[str] | None = None) -> int:
                         help=f"baseline file (default {DEFAULT_BASELINE})")
     parser.add_argument("--no-baseline", action="store_true",
                         help="ignore any baseline file")
+    parser.add_argument("--exclude", action="append", default=[],
+                        metavar="PATH",
+                        help="path prefix to skip (repeatable; e.g. "
+                             "tests/lint_fixtures, whose bad_*.py must "
+                             "keep flagging in the fixture self-check)")
     parser.add_argument("--write-baseline", action="store_true",
                         help="accept current findings into the baseline "
                              "(reasons default to TODO and must be edited)")
     args = parser.parse_args(argv)
 
     paths = args.paths or ["src"]
-    files = collect_files(paths)
+    files = collect_files(paths, exclude=args.exclude)
     if not files:
         print(f"repro.lint: no python files under {paths}", file=sys.stderr)
         return 2

@@ -52,6 +52,14 @@ DASHBOARD_HTML = """<!doctype html>
 <table><thead><tr><th class="num">#</th><th>path</th>
 <th class="num">CMetric (ms)</th><th class="num">&Delta; window</th>
 <th class="num">slices</th></tr></thead><tbody id="top"></tbody></table>
+<h2>what-if <span class="flat">(counterfactual projection)</span></h2>
+<form id="wiform">
+  <input id="witarget" size="34"
+         placeholder="tag &mdash; or host:NAME, worker:NAME, #rank">
+  shrink <input id="wishrink" value="0" size="4">
+  <button>project</button>
+</form>
+<div id="wiout"></div>
 <h2>per-host lanes</h2>
 <div id="lanes"></div>
 <script>
@@ -115,6 +123,56 @@ function render(top, hosts) {
   }
   document.getElementById("health").innerHTML = strip.join("");
 }
+async function whatif(ev) {
+  ev.preventDefault();
+  const raw = document.getElementById("witarget").value.trim();
+  const shrink = document.getElementById("wishrink").value.trim() || "0";
+  const out = document.getElementById("wiout");
+  if (!raw) { out.innerHTML = ""; return; }
+  let q;
+  if (raw.startsWith("#")) q = "path=" + encodeURIComponent(raw.slice(1));
+  else if (raw.startsWith("host:"))
+    q = "host=" + encodeURIComponent(raw.slice(5));
+  else if (raw.startsWith("worker:"))
+    q = "worker=" + encodeURIComponent(raw.slice(7));
+  else q = "tag=" + encodeURIComponent(raw);
+  try {
+    const r = await fetch(
+      `/api/whatif?${q}&shrink=${encodeURIComponent(shrink)}`);
+    const d = await r.json();
+    if (!r.ok) {
+      out.innerHTML =
+        `<span class="pill bad">${esc(d.error || r.status)}</span>`;
+      return;
+    }
+    const sp = d.speedup == null ? "&infin;" : d.speedup.toFixed(3) + "x";
+    const rows = (d.ranking || []).slice(0, 8).map(e => {
+      let mv = '<span class="flat">&ndash;</span>';
+      if (e.baseline_rank == null) mv = '<span class="up">new</span>';
+      else if (e.rank_delta) {
+        const up = e.rank_delta > 0;  // prev - new: positive moved up
+        mv = `<span class="${up ? "up" : "down"}">` +
+             `${up ? "&#9650;" : "&#9660;"}${Math.abs(e.rank_delta)}</span>`;
+      }
+      return `<tr><td class="num">${e.rank}</td><td>${esc(e.path)}</td>` +
+        `<td class="num">${fmtMs(e.cmetric_s)}</td>` +
+        `<td class="num">${mv}</td></tr>`;
+    });
+    out.innerHTML =
+      `<div class="strip">` +
+      `<span class="pill">projected speedup <b>${sp}</b></span>` +
+      `<span class="pill">saves <b>${fmtMs(d.saved_s)} ms</b></span>` +
+      `<span class="pill">matched <b>${d.matched_slices}</b> ` +
+      `critical slice(s)</span></div>` +
+      `<table><thead><tr><th class="num">#</th>` +
+      `<th>counterfactual ranking</th><th class="num">CMetric (ms)</th>` +
+      `<th class="num">move</th></tr></thead>` +
+      `<tbody>${rows.join("")}</tbody></table>`;
+  } catch (e) {
+    out.innerHTML = `<span class="pill bad">what-if failed: ${esc(e)}</span>`;
+  }
+}
+document.getElementById("wiform").addEventListener("submit", whatif);
 poll();
 </script>
 </body>

@@ -24,7 +24,7 @@ def test_json_schema_version_and_roundtrip():
     tr, clk, w = _bottleneck_trace()
     rep = detect(tr, None)
     d = json.loads(to_json(rep))
-    assert d["schema_version"] == 3   # v3 == additive host-provenance keys
+    assert d["schema_version"] == 4   # v4 == additive what_if key
     # the host fields are additive: absent entirely for single-host reports
     assert "worker_hosts" not in d and "per_host" not in d
     # ranked paths round-trip in order, with bit-identical CMetrics (json

@@ -107,7 +107,7 @@ def test_api_report_byte_equal_to_export_json(fleet):
     assert headers["Content-Type"].startswith("application/json")
     assert body == sess.export("json").encode("utf-8")
     doc = json.loads(body)
-    assert doc["schema_version"] == 3
+    assert doc["schema_version"] == 4
     assert set(doc["per_host"]) == {"alpha", "beta"}
 
 

@@ -46,8 +46,8 @@ SERVICE_KEYS = {
     "address", "requests", "connections", "open_connections",
     "http_errors", "stream_clients", "snapshot_count",
     "snapshot_seconds_sum", "snapshot_seconds_last", "window_folds",
-    "window_fold_seconds_sum", "max_window_s",
-    "retention_pruned_blocks", "retention_errors",
+    "window_fold_seconds_sum", "whatif_folds", "whatif_fold_seconds_sum",
+    "max_window_s", "retention_pruned_blocks", "retention_errors",
 }
 
 

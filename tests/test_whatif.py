@@ -1,0 +1,326 @@
+"""Causal what-if engine: counterfactual projections + sensitivity sweep.
+
+Acceptance properties (ISSUE 10):
+
+* removing an exclusively-serial section projects its exact duration
+  (the engine's "exact for serial sections" contract);
+* a tag with zero critical CMetric projects speedup 1.0 — never a
+  phantom gain;
+* unknown targets / missing replay handles / bad shrink values fail
+  loudly, not silently;
+* host-targeted shrink works on multi-host fleet reports and refuses
+  reports without host provenance;
+* the counterfactual fold agrees across numpy and pallas backends;
+* ``GET /api/whatif`` is byte-identical to the offline
+  ``report.what_if(...).to_json()`` on the same fleet_dir.
+"""
+import json
+import urllib.error
+
+import numpy as np
+import pytest
+
+from repro.core import ProfileSession, Tracer, detect, detect_offline
+from repro.core.report import JSON_SCHEMA_VERSION, render_text, to_json
+from repro.core.whatif import WHATIF_SCHEMA_VERSION, warp_log
+from repro.fleet import FleetSource, IngestServer, ProfilerService
+from tests.test_service import _get, _populate
+from tests.test_tracer import FakeClock
+
+PAR_MS, SERIAL_MS, REPS = 2, 5, 8
+
+
+def _serial_trace(n_min=1.9):
+    """w0/w1 parallel bursts; w2 exclusively-serial io_phase sections.
+
+    Removing io_phase is worth exactly REPS * SERIAL_MS of wall clock —
+    ground truth by construction."""
+    clk = FakeClock()
+    tr = Tracer(n_min=n_min, clock=clk)
+    w = [tr.register_worker(f"w{i}") for i in range(3)]
+    for _ in range(REPS):
+        tr.begin(w[0], "par")
+        tr.begin(w[1], "par")
+        clk.advance(PAR_MS * 1_000_000)
+        tr.end(w[0])
+        tr.end(w[1])
+        tr.begin(w[2], "io_phase")
+        clk.advance(SERIAL_MS * 1_000_000)
+        tr.end(w[2])
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# exactness on serial sections
+# ---------------------------------------------------------------------------
+
+def test_remove_serial_section_is_exact():
+    rep = detect(_serial_trace(), None, top_n=5)
+    wi = rep.what_if("io_phase", shrink=0.0)
+    truth = rep.total_time - REPS * SERIAL_MS * 1e-3
+    assert wi.projected_total_s == pytest.approx(truth, abs=1e-12)
+    assert wi.speedup == pytest.approx(rep.total_time / truth, rel=1e-9)
+    assert wi.matched_slices == REPS
+    assert wi.saved_s == pytest.approx(REPS * SERIAL_MS * 1e-3, abs=1e-12)
+    # the projection is a real report: the serial path's weight is gone
+    # (zero-duration slices may linger as zero-CMetric entries)
+    for e in wi.ranking:
+        if e["path"] == "io_phase":
+            assert e["cmetric_s"] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_partial_shrink_scales_linearly():
+    rep = detect(_serial_trace(), None, top_n=5)
+    for shrink in (0.25, 0.5, 0.75):
+        wi = rep.what_if("io_phase", shrink=shrink)
+        truth = rep.total_time - (1 - shrink) * REPS * SERIAL_MS * 1e-3
+        assert wi.projected_total_s == pytest.approx(truth, rel=1e-9)
+
+
+def test_what_if_composes():
+    """The counterfactual report carries its own replay handle."""
+    rep = detect(_serial_trace(), None, top_n=5)
+    wi = rep.what_if("io_phase", shrink=0.5)
+    wi2 = wi.report.what_if("io_phase", shrink=0.0)
+    truth = rep.total_time - REPS * SERIAL_MS * 1e-3
+    assert wi2.projected_total_s == pytest.approx(truth, rel=1e-9)
+
+
+def test_per_worker_shift_and_ranking_moves():
+    rep = detect(_serial_trace(), None, top_n=5)
+    wi = rep.what_if("io_phase", shrink=0.0)
+    rows = {r["worker"]: r for r in wi.per_worker}
+    assert rows["w2"]["delta_cmetric_s"] == pytest.approx(
+        -REPS * SERIAL_MS * 1e-3, rel=1e-9)
+    for e in wi.ranking:
+        assert {"rank", "baseline_rank", "rank_delta"} <= set(e)
+
+
+# ---------------------------------------------------------------------------
+# edge cases: zero-CMetric tags, unknown targets, missing replay
+# ---------------------------------------------------------------------------
+
+def test_zero_cmetric_tag_projects_no_gain():
+    """'par' runs at full parallelism — nothing critical, so shrinking it
+    cannot shrink wall clock."""
+    rep = detect(_serial_trace(), None, top_n=5)
+    wi = rep.what_if("par", shrink=0.0)
+    assert wi.matched_slices == 0
+    assert wi.speedup == 1.0
+    assert wi.projected_total_s == pytest.approx(rep.total_time)
+    assert wi.to_doc()["saved_s"] == 0.0
+
+
+def test_unknown_tag_raises_with_known_names():
+    rep = detect(_serial_trace(), None, top_n=5)
+    with pytest.raises(ValueError, match="io_phase"):
+        rep.what_if("no_such_tag")
+
+
+def test_report_without_replay_raises():
+    rep = detect(_serial_trace(), None, top_n=5)
+    rep.replay = None
+    with pytest.raises(RuntimeError, match="replay"):
+        rep.what_if("io_phase")
+    with pytest.raises(RuntimeError, match="replay"):
+        rep.sensitivity()
+
+
+def test_shrink_and_target_validation():
+    rep = detect(_serial_trace(), None, top_n=5)
+    with pytest.raises(ValueError, match="shrink"):
+        rep.what_if("io_phase", shrink=-0.1)
+    with pytest.raises(ValueError, match="shrink"):
+        rep.what_if("io_phase", shrink=1.5)
+    with pytest.raises(ValueError, match="exactly one"):
+        rep.what_if()
+    with pytest.raises(ValueError, match="exactly one"):
+        rep.what_if("io_phase", worker="w2")
+    with pytest.raises(ValueError, match="host"):
+        rep.what_if(host="nowhere")         # no host provenance
+
+
+def test_path_rank_targeting_matches_tag_targeting():
+    rep = detect(_serial_trace(), None, top_n=5)
+    assert rep.path_str(rep.paths[0]) == "io_phase"
+    by_tag = rep.what_if("io_phase", shrink=0.0)
+    by_rank = rep.what_if(path=1, shrink=0.0)
+    assert by_rank.projected_total_s == by_tag.projected_total_s
+    with pytest.raises(ValueError, match="rank"):
+        rep.what_if(path=99)
+
+
+def test_worker_targeting():
+    rep = detect(_serial_trace(), None, top_n=5)
+    wi = rep.what_if(worker="w2", shrink=0.0)
+    truth = rep.total_time - REPS * SERIAL_MS * 1e-3
+    assert wi.projected_total_s == pytest.approx(truth, rel=1e-9)
+    with pytest.raises(ValueError, match="unknown worker"):
+        rep.what_if(worker="w9")
+
+
+def test_warp_log_empty_and_no_target():
+    tr = _serial_trace()
+    log = tr.freeze().sanitize()
+    warped, saved, n, comp = warp_log(
+        log, np.zeros(0, np.int64), np.zeros(0, np.int64), 0.0)
+    assert warped is log and saved == 0.0 and n == 0 and comp == 0.0
+
+
+# ---------------------------------------------------------------------------
+# backend parity
+# ---------------------------------------------------------------------------
+
+def test_numpy_vs_pallas_counterfactual_parity():
+    tr = _serial_trace()
+    log = tr.freeze()
+    reps = {}
+    for backend in ("numpy", "pallas"):
+        r = detect_offline(log, tr.tags, tr.stacks, 1.9, backend=backend,
+                           worker_names=tr.worker_names())
+        reps[backend] = r.what_if("io_phase", shrink=0.0)
+    a, b = reps["numpy"], reps["pallas"]
+    assert a.matched_slices == b.matched_slices
+    assert a.projected_total_s == pytest.approx(b.projected_total_s,
+                                                rel=1e-6)
+    assert a.speedup == pytest.approx(b.speedup, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity sweep
+# ---------------------------------------------------------------------------
+
+def test_sensitivity_stable_ranking():
+    # n_min=2.5 keeps the sweep's lowest threshold (x0.5 -> 1.25) above
+    # the serial sections' threads_av of 1, so a *stable* ranking is the
+    # correct expectation across every variant
+    rep = detect(_serial_trace(n_min=2.5), None, top_n=5)
+    sr = rep.sensitivity()
+    assert sr.summary["variants"] == 5        # n_min sweep, no sampler
+    assert sr.summary["stable"] is True
+    assert sr.summary["top1_stability"] == 1.0
+    assert sr.rank_stability["io_phase"]["baseline_rank"] == 1
+    doc = sr.to_doc()
+    assert doc["schema_version"] == WHATIF_SCHEMA_VERSION
+    assert json.loads(sr.to_json()) == doc
+
+
+def test_sensitivity_unknown_param_raises():
+    rep = detect(_serial_trace(), None, top_n=5)
+    with pytest.raises(ValueError, match="unknown sensitivity"):
+        rep.sensitivity({"bogus_knob": (1.0,)})
+
+
+def test_sensitivity_custom_scales():
+    rep = detect(_serial_trace(), None, top_n=5)
+    sr = rep.sensitivity({"n_min_scale": (1.0, 2.0)})
+    assert sr.summary["variants"] == 2
+    assert [v["value"] for v in sr.variants] == [1.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# exporters: schema v4, additive what_if key, text section
+# ---------------------------------------------------------------------------
+
+def test_export_json_whatif_additive():
+    rep = detect(_serial_trace(), None, top_n=5)
+    plain = json.loads(to_json(rep))
+    assert plain["schema_version"] == JSON_SCHEMA_VERSION == 4
+    assert "what_if" not in plain
+    doc = json.loads(to_json(rep, what_if=3, what_if_shrink=0.0))
+    assert doc["what_if"]["shrink"] == 0.0
+    projections = doc["what_if"]["projections"]
+    assert projections[0]["rank"] == 1
+    assert projections[0]["path"] == "io_phase"
+    assert projections[0]["speedup"] > 1.0
+    # dropping the extra key reproduces the plain document
+    doc.pop("what_if")
+    assert doc == plain
+
+
+def test_render_text_whatif_section():
+    rep = detect(_serial_trace(), None, top_n=5)
+    assert "what-if" not in render_text(rep)
+    txt = render_text(rep, what_if=2)
+    assert "what-if projections" in txt
+    assert "io_phase" in txt
+
+
+# ---------------------------------------------------------------------------
+# fleet: host targeting + /api/whatif byte-consistency
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def fleet_dir(tmp_path):
+    d = str(tmp_path / "fleet")
+    server = IngestServer(fleet_dir=d)
+    server.start()
+    try:
+        _populate(server, tmp_path)
+        assert server.wait_idle(10), server.stats()
+    finally:
+        server.close()
+    return d
+
+
+def _offline_rep(fleet_dir, n_min=2.0):
+    return ProfileSession(FleetSource.from_fleet_dir(fleet_dir),
+                          n_min=n_min).result()
+
+
+def test_fleet_host_shrink(fleet_dir):
+    rep = _offline_rep(fleet_dir)
+    wi = rep.what_if(host="alpha", shrink=0.0)
+    assert wi.selection == {"kind": "host", "value": "alpha", "workers":
+                            wi.selection["workers"]}
+    assert wi.matched_slices == 40
+    assert wi.speedup > 1.0
+    # host rows carry provenance in the per-worker shift
+    assert {r.get("host") for r in wi.per_worker} == {"alpha", "beta"}
+    with pytest.raises(ValueError, match="unknown host"):
+        rep.what_if(host="gamma")
+
+
+def test_fleet_tag_shrink_without_stacks(fleet_dir):
+    """Fleet logs carry tags but no interned stacks — tag targeting must
+    still resolve through the event stream."""
+    rep = _offline_rep(fleet_dir)
+    wi = rep.what_if("work-alpha", shrink=0.0)
+    assert wi.matched_slices == 40
+    assert wi.speedup > 1.0
+
+
+def test_api_whatif_byte_equal_to_offline(fleet_dir):
+    svc = ProfilerService.from_fleet_dir(fleet_dir, n_min=2.0).start()
+    try:
+        status, headers, body = _get(
+            svc, "/api/whatif?tag=work-alpha&shrink=0")
+        assert status == 200
+        assert headers["Content-Type"].startswith("application/json")
+        stats = svc.stats()
+    finally:
+        svc.close()
+    want = _offline_rep(fleet_dir).what_if(
+        "work-alpha", shrink=0.0).to_json().encode("utf-8")
+    assert body == want
+    doc = json.loads(body)
+    assert doc["schema_version"] == WHATIF_SCHEMA_VERSION
+    assert stats["whatif_folds"] == 1
+    assert stats["whatif_fold_seconds_sum"] > 0.0
+
+
+def test_api_whatif_error_paths(fleet_dir):
+    svc = ProfilerService.from_fleet_dir(fleet_dir, n_min=2.0).start()
+    try:
+        for path, code in (
+                ("/api/whatif", 400),                     # no target
+                ("/api/whatif?tag=a&worker=b", 400),      # two targets
+                ("/api/whatif?tag=work-alpha&shrink=2", 400),
+                ("/api/whatif?tag=nope", 404),            # unknown tag
+                ("/api/whatif?host=gamma", 404),          # unknown host
+        ):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(svc, path)
+            assert ei.value.code == code, path
+    finally:
+        svc.close()
